@@ -1,0 +1,80 @@
+"""Render the §Roofline table from the dry-run JSON artifacts.
+
+Reads experiments/dryrun/<arch>_<shape>_<mesh>.json (written by
+`python -m repro.launch.dryrun --all --out experiments/dryrun`) and emits
+the per-cell three-term roofline summary used in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# prefer the optimized (v2) sweep when present; fall back to the baseline
+DRYRUN_DIRS = [os.path.join(_ROOT, "experiments", "dryrun_v2"),
+               os.path.join(_ROOT, "experiments", "dryrun")]
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    for d in DRYRUN_DIRS:
+        if not os.path.isdir(d):
+            continue
+        out = []
+        for fn in sorted(os.listdir(d)):
+            if not fn.endswith(f"_{mesh}.json"):
+                continue
+            with open(os.path.join(d, fn)) as f:
+                out.append(json.load(f))
+        if out:
+            return out
+    raise FileNotFoundError(f"no *_{mesh}.json under {DRYRUN_DIRS}")
+
+
+def render_table(cells: list[dict]) -> str:
+    hdr = (f"{'arch':28s} {'cell':12s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'bound':>6s} {'useful':>7s} {'roofline':>9s} "
+           f"{'peakGiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        if c.get("skipped"):
+            lines.append(f"{c['arch']:28s} {c['cell']:12s} "
+                         f"{'— skipped: ' + c['reason'][:60]}")
+            continue
+        if "error" in c:
+            lines.append(f"{c['arch']:28s} {c['cell']:12s} ERROR "
+                         f"{c['error'][:70]}")
+            continue
+        r = c.get("roofline_kernel_adjusted",
+                  c.get("roofline_extrapolated", c.get("roofline")))
+        peak = c.get("memory", {}).get("peak_memory_in_bytes", 0) / 2**30
+        lines.append(
+            f"{c['arch']:28s} {c['cell']:12s} "
+            f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+            f"{r['collective_s']:9.4f} "
+            f"{r['bottleneck'].split('_')[0]:>6s} "
+            f"{r['useful_flop_ratio']:7.2%} "
+            f"{r['roofline_fraction']:9.2%} {peak:8.1f}")
+    return "\n".join(lines)
+
+
+def run(echo: bool = True, mesh: str = "single") -> dict:
+    cells = load_cells(mesh)
+    table = render_table(cells)
+    if echo:
+        print(table)
+    ok = [c for c in cells if "error" not in c and not c.get("skipped")]
+    out = {
+        "n_cells": len(cells),
+        "n_ok": len(ok),
+        "n_skipped": sum(1 for c in cells if c.get("skipped")),
+        "n_error": sum(1 for c in cells if "error" in c),
+        "table": table,
+    }
+    emit(f"roofline_{mesh}", out, echo=False)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""C2: self-termination scale-down — idle-timeout sweep.
+
+Scale-down in the paper is emergent (workers exit when no matching work
+waits).  The idle_timeout trades wasted idle resource-seconds against
+re-provisioning latency for the next burst.  We measure both sides.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import ProvisionerConfig, Simulation, gpu_job, onprem_nodes
+
+
+def _run(idle_timeout: float, second_wave_gap: float, seed: int = 0):
+    cfg = ProvisionerConfig(submit_interval_s=30,
+                            idle_timeout_s=idle_timeout,
+                            startup_delay_s=60)
+    sim = Simulation(cfg, nodes=onprem_nodes(4, gpus=8), tick_s=5,
+                     seed=seed)
+    sim.submit_jobs(0, [gpu_job(600, gpus=1) for _ in range(16)])
+    sim.submit_jobs(second_wave_gap,
+                    [gpu_job(600, gpus=1) for _ in range(16)])
+    sim.run_until_drained(max_t=40000)
+    s = sim.summary()
+    idle_s = s["workers"]["alive_s"] - s["workers"]["busy_s"]
+    return {
+        "idle_timeout_s": idle_timeout,
+        "pods_submitted": s["pods_submitted"],
+        "worker_idle_s": idle_s,
+        "worker_utilization": s["workers"]["utilization"],
+        "second_wave_wait_s": s["jobs"]["mean_wait_s"],
+        "makespan_s": sim.now,
+    }
+
+
+def run(echo: bool = True) -> dict:
+    gap = 1500  # second burst lands after the first drains
+    rows = [_run(t, gap) for t in (60, 300, 900)]
+    out = {f"timeout_{int(r['idle_timeout_s'])}s": r for r in rows}
+    # short timeout -> fewer idle seconds; long timeout -> fewer new pods
+    assert rows[0]["worker_idle_s"] <= rows[-1]["worker_idle_s"]
+    assert rows[-1]["pods_submitted"] <= rows[0]["pods_submitted"]
+    emit("scaledown", out, echo=echo)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Straggler mitigation (beyond-paper): makespan with/without speculative
+rescheduling when a fraction of nodes silently degrade to 10–30% speed —
+the dominant failure mode at 1000+-node scale (thermal throttling, bad
+HBM, noisy neighbours) that HTCondor-style job-level rescheduling absorbs.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import ProvisionerConfig, Simulation, gpu_job, onprem_nodes
+from repro.core.stragglers import StragglerPolicy
+
+
+def _run(policy, *, frac: float, rate: float, seed: int = 0):
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=120,
+                            startup_delay_s=10)
+    sim = Simulation(cfg, nodes=onprem_nodes(4, gpus=8), tick_s=5,
+                     seed=seed, straggler_policy=policy)
+    sim.submit_jobs(0, [gpu_job(600, gpus=1, checkpoint_interval_s=120)
+                        for _ in range(24)])
+    sim.inject_slow_workers(120, frac=frac, rate=rate)
+    sim.run_until_drained(max_t=60000)
+    s = sim.summary()
+    return {
+        "makespan_s": sim.now,
+        "completed": s["jobs"]["n"],
+        "rescheduled": policy.rescheduled if policy else 0,
+        "workers_retired": policy.retired_workers if policy else 0,
+        "goodput": s["jobs"].get("goodput", 1.0),
+    }
+
+
+def run(echo: bool = True) -> dict:
+    out = {}
+    for frac, rate in ((0.3, 0.1), (0.5, 0.3)):
+        base = _run(None, frac=frac, rate=rate)
+        mit = _run(StragglerPolicy(factor=1.5), frac=frac, rate=rate)
+        out[f"slow{int(frac*100)}pct_rate{rate}"] = {
+            "no_mitigation": base,
+            "with_mitigation": mit,
+            "makespan_speedup": base["makespan_s"] / mit["makespan_s"],
+        }
+        assert mit["completed"] == base["completed"] == 24
+        assert mit["makespan_s"] <= base["makespan_s"]
+    emit("stragglers", out, echo=echo)
+    return out
+
+
+if __name__ == "__main__":
+    run()

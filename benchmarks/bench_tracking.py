@@ -1,0 +1,71 @@
+"""Fig-3 analogue: demand-driven node auto-provisioning on a GKE-like
+elastic cluster (7-GPU nodes, 1-GPU pods, spot semantics).
+
+The paper's observations to reproduce:
+  * provisioned node capacity tracks HTCondor-driven pod demand promptly
+  * new nodes appear within the provisioning delay
+  * deprovisioning leaves bounded waste ("close to the minimum
+    achievable") because co-located pods rarely finish together
+
+We drive a bursty demand pattern (3 waves), record the demand/supply time
+series, and report tracking lag + waste fraction.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import (
+    NodeTemplate, ProvisionerConfig, Simulation, gpu_job,
+)
+
+
+def run(seed: int = 0, echo: bool = True,
+        scale_down_delay_s: float = 600.0) -> dict:
+    cfg = ProvisionerConfig(
+        submit_interval_s=30, idle_timeout_s=300, startup_delay_s=15,
+        max_pods_per_group=200, max_total_pods=400,
+    )
+    tmpl = NodeTemplate(
+        capacity={"cpu": 64, "gpu": 7, "memory": 512, "disk": 2048},
+        provision_delay_s=90,      # instance boot + kubelet join
+        scale_down_delay_s=scale_down_delay_s,  # GKE empty-node grace
+    )
+    sim = Simulation(cfg, nodes=[], node_template=tmpl, max_nodes=24,
+                     tick_s=5, seed=seed)
+
+    # three demand waves, as in the paper's test run
+    sim.submit_jobs(0, [gpu_job(1800, gpus=1) for _ in range(30)])
+    sim.submit_jobs(4000, [gpu_job(1200, gpus=1) for _ in range(70)])
+    sim.submit_jobs(9000, [gpu_job(900, gpus=1) for _ in range(20)])
+    sim.run(16000)
+    sim.run_until_drained(max_t=40000)
+
+    rec = sim.recorder
+    lag = rec.tracking_lag("idle_jobs", "ready_workers", threshold=0.8)
+    out = {
+        "summary": sim.summary(),
+        "tracking_lag_s_0.8": lag,
+        "peak_nodes": rec.max("live_nodes"),
+        "peak_demand": rec.max("idle_jobs"),
+        "waste_fraction": sim.autoscaler.waste_fraction(),
+        "nodes_provisioned": sim.autoscaler.provisioned_total,
+        "nodes_deprovisioned": sim.autoscaler.deprovisioned_total,
+        "series_tail": {
+            k: rec.series[k][-3:] for k in ("idle_jobs", "live_nodes")
+        },
+    }
+    # waste decomposition: most empty-node-seconds are the deliberate
+    # scale-down grace, not bin-packing leftovers — re-run with a short
+    # grace to separate the two (the paper's "minimum achievable")
+    if scale_down_delay_s == 600.0:
+        short = run(seed=seed, echo=False, scale_down_delay_s=120.0)
+        out["waste_fraction_grace120"] = short["waste_fraction"]
+
+    emit("tracking", out, echo=echo)
+    # paper-facing checks
+    assert out["nodes_provisioned"] == out["nodes_deprovisioned"]
+    assert out["summary"]["jobs"]["n"] == 120
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "bench")
+
+
+def emit(name: str, payload: dict, *, echo: bool = True):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    if echo:
+        print(f"== {name} ==")
+        print(json.dumps(payload, indent=1, default=str))
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

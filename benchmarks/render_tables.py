@@ -1,0 +1,107 @@
+"""Render §Dry-run / §Roofline markdown tables from dry-run JSON dirs.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.render_tables \
+      --dir experiments/dryrun_v2 --mesh single > /tmp/v2_table.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load(dirname: str, mesh: str):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dirname, f"*_{mesh}.json"))):
+        rows.append(json.load(open(fn)))
+    rows.sort(key=lambda c: (c["arch"], ORDER[c["cell"]]))
+    return rows
+
+
+def roofline_table(rows):
+    out = ["| arch | cell | compute_s | memory_s | collective_s | bound | "
+           "useful | roofline | peak GiB |", "|" + "---|" * 9]
+    for c in rows:
+        if c.get("skipped"):
+            out.append(f"| {c['arch']} | {c['cell']} | — | — | — | — | — "
+                       f"| skip | — |")
+            continue
+        if "error" in c:
+            out.append(f"| {c['arch']} | {c['cell']} | ERROR: "
+                       f"{c['error'][:60]} |")
+            continue
+        r = c.get("roofline_kernel_adjusted") or c["roofline"]
+        peak = c.get("memory", {}).get("peak_memory_in_bytes", 0) / 2**30
+        over = " ⚠" if peak > 16 else ""
+        out.append(
+            f"| {c['arch']} | {c['cell']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['bottleneck'].split('_')[0]} | "
+            f"{r['useful_flop_ratio']:.1%} | "
+            f"{r['roofline_fraction']:.2%} | {peak:.1f}{over} |")
+    return "\n".join(out)
+
+
+def compile_table(rows):
+    """Compact compile-proof table (used for the multi-pod mesh)."""
+    out = ["| arch | cell | compile_s | peak GiB | status |",
+           "|" + "---|" * 5]
+    for c in rows:
+        if c.get("skipped"):
+            out.append(f"| {c['arch']} | {c['cell']} | — | — | skip |")
+            continue
+        if "error" in c:
+            out.append(f"| {c['arch']} | {c['cell']} | — | — | ERROR |")
+            continue
+        peak = c.get("memory", {}).get("peak_memory_in_bytes", 0) / 2**30
+        out.append(f"| {c['arch']} | {c['cell']} | {c['compile_s']:.0f} | "
+                   f"{peak:.1f} | OK |")
+    return "\n".join(out)
+
+
+def delta_table(rows_v1, rows_v2):
+    """Per-cell v1→v2 step-lower-bound deltas (single-pod)."""
+    idx = {(c["arch"], c["cell"]): c for c in rows_v1}
+    out = ["| arch | cell | lower-bound v1→v2 (s) | speedup | "
+           "roofline v1→v2 |", "|" + "---|" * 5]
+    for c2 in rows_v2:
+        key = (c2["arch"], c2["cell"])
+        c1 = idx.get(key)
+        if not c1 or c1.get("skipped") or "error" in c1 or "error" in c2:
+            continue
+        r1 = c1.get("roofline_kernel_adjusted") or c1["roofline"]
+        r2 = c2.get("roofline_kernel_adjusted") or c2["roofline"]
+        t1, t2 = (r1["step_time_lower_bound_s"],
+                  r2["step_time_lower_bound_s"])
+        if t1 <= 0 or t2 <= 0:
+            continue
+        out.append(
+            f"| {key[0]} | {key[1]} | {t1:.3f} → {t2:.3f} | "
+            f"{t1 / t2:.2f}× | {r1['roofline_fraction']:.2%} → "
+            f"{r2['roofline_fraction']:.2%} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun_v2")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--kind", default="roofline",
+                    choices=("roofline", "compile", "delta"))
+    ap.add_argument("--baseline-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh)
+    if args.kind == "roofline":
+        print(roofline_table(rows))
+    elif args.kind == "compile":
+        print(compile_table(rows))
+    else:
+        print(delta_table(load(args.baseline_dir, args.mesh), rows))
+
+
+if __name__ == "__main__":
+    main()

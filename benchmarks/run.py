@@ -1,0 +1,52 @@
+"""Benchmark driver: `PYTHONPATH=src python -m benchmarks.run`.
+
+Runs every control-plane benchmark (one per paper figure/claim) plus the
+kernel table.  The 40-cell dry-run/roofline sweep is separate
+(`python -m repro.launch.dryrun --all`) because it needs the 512-device
+XLA flag at process start; `benchmarks.bench_roofline` renders its output.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main():
+    from benchmarks import (
+        bench_grouping, bench_kernels, bench_preemption, bench_scaledown,
+        bench_stragglers, bench_tracking, bench_utilization,
+    )
+
+    t0 = time.time()
+    failures = []
+    for mod in (bench_tracking, bench_grouping, bench_preemption,
+                bench_scaledown, bench_stragglers, bench_utilization,
+                bench_kernels):
+        name = mod.__name__.split(".")[-1]
+        t = time.time()
+        try:
+            mod.run(echo=False)
+            print(f"[bench] {name:20s} OK   ({time.time()-t:.1f}s)")
+        except Exception as e:
+            failures.append((name, e))
+            print(f"[bench] {name:20s} FAIL {type(e).__name__}: {e}")
+
+    # roofline rendering if dry-run artifacts exist
+    try:
+        from benchmarks import bench_roofline
+        bench_roofline.run(echo=True)
+        print("[bench] bench_roofline      OK")
+    except FileNotFoundError:
+        print("[bench] bench_roofline      SKIP (run repro.launch.dryrun "
+              "--all first)")
+    except Exception as e:
+        failures.append(("bench_roofline", e))
+        print(f"[bench] bench_roofline      FAIL {e}")
+
+    print(f"[bench] total {time.time()-t0:.1f}s, {len(failures)} failures")
+    print("[bench] JSON artifacts in experiments/bench/")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""Paper §4 operation mode (b): the layered "grid portal".
+
+When a community can't run its own provisioner, the Kubernetes resource
+owner stands up a LOCAL dedicated HTCondor pool + a grid interface
+(HTCondor-CE); the community's global pool submits PILOTS through the CE;
+the local provisioner — knowing nothing about the community — scales
+Kubernetes pods for whatever lands in the local queue.
+
+Two queues, two matchmaking layers:
+  community pool:  user jobs  ->  pilot factory (GlideinWMS stand-in)
+  local pool:      pilot jobs ->  the paper's provisioner -> k8s pods
+Pilots, once running, call home and pull user jobs — closing the loop.
+
+Run:  PYTHONPATH=src python examples/grid_portal.py
+"""
+from repro.core import (
+    Collector, Job, JobQueue, ProvisionerConfig, Simulation, gpu_job,
+    onprem_nodes,
+)
+
+
+def main():
+    # --- local pool at the resource owner, with the paper's provisioner
+    local_cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=180,
+                                  startup_delay_s=30)
+    local = Simulation(local_cfg, nodes=onprem_nodes(4, gpus=8), tick_s=5)
+
+    # --- community global pool: just a queue of user jobs here
+    community = JobQueue()
+    for _ in range(24):
+        community.submit(Job(ad={"request_gpus": 1, "request_cpus": 1,
+                                 "request_memory": 4},
+                             runtime_s=600), now=0.0)
+
+    # --- pilot factory: submits one PILOT job to the local pool per
+    # idle user job (GlideinWMS pressure-based logic, simplified)
+    submitted_pilots = [0]
+
+    def pilot_factory(sim: Simulation, now: float):
+        idle_users = community.n_idle()
+        idle_pilots = sim.queue.n_idle() + sim.queue.n_running()
+        deficit = idle_users - idle_pilots
+        for _ in range(max(0, deficit)):
+            # a pilot is itself a job: when it runs, it pulls user work
+            def pilot_work(job, dt, *, q=community):
+                # pull-mode: consume user jobs while any remain
+                idle = q.idle_jobs()
+                if not idle:
+                    return True          # pilot exits when queue empty
+                j = idle[0]
+                q.claim(j.jid, f"pilot-{job.jid}", job.ad.get('_t', 0))
+                j.remaining_s -= dt * 20  # pilot runs user payloads
+                if j.remaining_s <= 0:
+                    q.complete(j.jid, 0)
+                else:
+                    q.release(j.jid, 0, preempted=False)
+                return False
+
+            sim.queue.submit(
+                Job(ad={"request_gpus": 1, "request_cpus": 1,
+                        "request_memory": 4, "is_pilot": True},
+                    runtime_s=1e9, work_fn=pilot_work), now)
+            submitted_pilots[0] += 1
+
+    t = 0.0
+    while t < 4000:
+        local.at(t, pilot_factory, name="pilot-factory")
+        t += 60
+
+    local.run(12000)
+    done = len(community.completed_log)
+    print(f"user jobs completed through the portal: {done}/24")
+    print(f"pilots submitted: {submitted_pilots[0]}, "
+          f"k8s pods: {local.provisioner.stats.submitted}")
+    assert done == 24, "all community jobs must flow through the portal"
+    print("grid portal OK")
+
+
+if __name__ == "__main__":
+    main()

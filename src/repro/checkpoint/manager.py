@@ -1,0 +1,158 @@
+"""Checkpointing: atomic, optionally async, reshard-on-restore.
+
+Fault-tolerance contract with the provisioner (paper §5 adapted to SPMD):
+a preempted training worker group loses its slice mid-step; the job
+restarts from ``latest_step()`` on whatever slice the provisioner hands it
+next — possibly a *different* mesh shape (elastic DP).  Restore therefore
+takes the *target* sharding tree and device_puts each leaf into it: the
+on-disk layout is mesh-agnostic (full unsharded arrays per leaf).
+
+Layout:
+    <dir>/step_<n>/arrays.npz     flat {path: np.ndarray}
+    <dir>/step_<n>/DONE           commit marker (atomic rename of tmp dir)
+
+Async mode snapshots to host memory synchronously (cheap: device->host
+copy) and writes to disk on a background thread — the train loop never
+blocks on the filesystem, the standard large-scale trick.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16",
+                                                       "float16"):
+            # npz cannot store ml_dtypes; widen losslessly to f32
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, async_mode: bool = True,
+                 keep: int = 3):
+        self.dir = directory
+        self.async_mode = async_mode
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, *, blocking: bool = False,
+             extra: dict | None = None):
+        # synchronous device->host snapshot (consistent view of the step)
+        host = _flatten_with_paths(tree)
+        meta = {"step": int(step), "extra": extra or {}}
+
+        if self.async_mode and not blocking:
+            self.wait()  # at most one outstanding write
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host, meta)
+
+    def _write(self, step: int, host: dict, meta: dict):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            full = os.path.join(self.dir, name)
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and os.path.exists(os.path.join(full, "DONE"))):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: PyTree,
+                shardings: PyTree | None = None) -> PyTree:
+        """Restore into the structure of `target` (a pytree of arrays or
+        ShapeDtypeStructs). `shardings` (same structure) reshards each leaf
+        onto the *current* mesh — elastic restore after a mesh change."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        if not os.path.exists(os.path.join(path, "DONE")):
+            raise FileNotFoundError(f"no committed checkpoint at {path}")
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            arrays = {k: data[k] for k in data.files}
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+        sh_leaves = (
+            treedef.flatten_up_to(shardings) if shardings is not None
+            else [None] * len(flat)
+        )
+        leaves = []
+        for (pth, tgt), sh in zip(flat, sh_leaves):
+            key = _SEP.join(_path_str(p) for p in pth)
+            if key not in arrays:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = arrays[key]
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"target {tgt.shape}"
+                )
+            arr = arr.astype(tgt.dtype)
+            leaves.append(
+                jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr)
+            )
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def read_meta(self, step: int) -> dict:
+        path = os.path.join(self.dir, f"step_{step:08d}", "meta.json")
+        with open(path) as f:
+            return json.load(f)

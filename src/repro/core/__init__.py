@@ -1,0 +1,14 @@
+"""The paper's contribution: demand-driven auto-scaling provisioning of
+Kubernetes-managed resources into HTCondor pools (Sfiligoi et al., PEARC22).
+"""
+from repro.core.classad import ClassAdExpr, symmetric_match, UNDEFINED
+from repro.core.jobqueue import Job, JobQueue, JobState
+from repro.core.cluster import KubeCluster, Node, Pod, PodPhase
+from repro.core.worker import Collector, Worker, advance_workers, kill_worker
+from repro.core.groups import GroupSignature, group_jobs, signature_of
+from repro.core.config import ProvisionerConfig, load_ini, PAPER_EXAMPLE_INI
+from repro.core.provisioner import Provisioner
+from repro.core.nodescaler import NodeAutoscaler, NodeTemplate
+from repro.core.simulation import Simulation, gpu_job, onprem_nodes
+from repro.core.metrics import Recorder
+from repro.core.stragglers import StragglerPolicy

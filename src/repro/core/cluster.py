@@ -1,0 +1,267 @@
+"""Simulated Kubernetes cluster: nodes, pods, priority scheduling, preemption.
+
+This is the environment the paper's provisioner drives.  Faithful to the
+mechanisms the paper relies on:
+
+  * pods request {cpu, gpu, memory, disk}; the scheduler bin-packs them
+    onto nodes (best-fit by leftover gpu, then cpu)
+  * priorityClass (Fig 1: `priority_class=opportunistic`): higher-priority
+    pending pods may PREEMPT lower-priority running pods (§5 — batch pods
+    run low-priority so service workloads evict them, not vice versa)
+  * tolerations / node selectors (Fig 1): a pod only lands on nodes whose
+    taints are all tolerated and whose labels satisfy the node affinity
+  * node-level failures / spot reclaims (§5): all pods on the node die
+  * TPU extension (hardware adaptation): a node models a pod-slice host
+    group with `chips`; worker pods request whole sub-slices
+
+The cluster is deliberately control-plane-only: pod "work" happens in
+worker.py (HTCondor startd side).  Everything advances via tick(now).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Any, Callable
+
+PRIORITY = {"system": 1000, "production": 100, "default": 50,
+            "opportunistic": 10}
+
+
+class PodPhase(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    SUCCEEDED = "succeeded"
+    FAILED = "failed"      # includes preempted / node-lost
+
+
+@dataclasses.dataclass
+class Node:
+    name: str
+    capacity: dict[str, float]          # cpu, gpu, memory, disk, chips
+    labels: dict[str, str] = dataclasses.field(default_factory=dict)
+    taints: tuple[str, ...] = ()
+    created_at: float = 0.0
+    # accounting
+    busy_integral: dict[str, float] = dataclasses.field(
+        default_factory=dict)   # resource-seconds in use
+    alive_s: float = 0.0
+
+    def allocatable(self, pods: list["Pod"], *,
+                    used: dict[str, float] | None = None
+                    ) -> dict[str, float]:
+        if used is None:
+            used = {}
+            for p in pods:
+                if p.node == self.name and p.phase == PodPhase.RUNNING:
+                    for k, v in p.request.items():
+                        used[k] = used.get(k, 0) + v
+        return {k: self.capacity.get(k, 0) - used.get(k, 0)
+                for k in set(self.capacity) | set(used)}
+
+
+@dataclasses.dataclass
+class Pod:
+    name: str
+    request: dict[str, float]
+    priority_class: str = "default"
+    tolerations: tuple[str, ...] = ()
+    node_selector: dict[str, Any] = dataclasses.field(default_factory=dict)
+    labels: dict[str, str] = dataclasses.field(default_factory=dict)
+    on_start: Callable[["Pod", float], None] | None = None
+    on_stop: Callable[["Pod", float, str], None] | None = None
+
+    phase: PodPhase = PodPhase.PENDING
+    node: str | None = None
+    created_at: float = 0.0
+    started_at: float = -1.0
+    stopped_at: float = -1.0
+    stop_reason: str = ""
+
+    @property
+    def priority(self) -> int:
+        return PRIORITY.get(self.priority_class, 50)
+
+
+class KubeCluster:
+    def __init__(self, nodes: list[Node] | None = None, *,
+                 enable_preemption: bool = True):
+        self.nodes: dict[str, Node] = {n.name: n for n in (nodes or [])}
+        self.pods: dict[str, Pod] = {}
+        self.enable_preemption = enable_preemption
+        self._ids = itertools.count()
+        self.now = 0.0
+        self.events: list[tuple[float, str, str]] = []  # (t, kind, detail)
+        # incremental per-node usage cache (O(1) allocatable checks)
+        self._used: dict[str, dict[str, float]] = {}
+
+    def _use(self, node: str, request: dict, sign: float):
+        u = self._used.setdefault(node, {})
+        for k, v in request.items():
+            u[k] = u.get(k, 0) + sign * v
+
+    def node_used(self, node: str) -> dict[str, float]:
+        return dict(self._used.get(node, {}))
+
+    # -- API used by the provisioner (namespaced service account) ----------
+    def create_pod(self, pod: Pod, now: float) -> str:
+        pod.name = pod.name or f"pod-{next(self._ids)}"
+        pod.created_at = now
+        self.pods[pod.name] = pod
+        return pod.name
+
+    def delete_pod(self, name: str, now: float, reason: str = "deleted"):
+        pod = self.pods.get(name)
+        if pod is None:
+            return
+        self._stop_pod(pod, now, reason)
+        self.pods.pop(name, None)
+
+    def pending_pods(self, selector: Callable[[Pod], bool] | None = None
+                     ) -> list[Pod]:
+        out = [p for p in self.pods.values() if p.phase == PodPhase.PENDING]
+        return [p for p in out if selector(p)] if selector else out
+
+    def running_pods(self, selector: Callable[[Pod], bool] | None = None
+                     ) -> list[Pod]:
+        out = [p for p in self.pods.values() if p.phase == PodPhase.RUNNING]
+        return [p for p in out if selector(p)] if selector else out
+
+    # -- node lifecycle (autoscaler / failures) ------------------------------
+    def add_node(self, node: Node, now: float):
+        node.created_at = now
+        self.nodes[node.name] = node
+        self.events.append((now, "node_add", node.name))
+
+    def remove_node(self, name: str, now: float, reason: str = "scale_down"):
+        for pod in list(self.pods.values()):
+            if pod.node == name and pod.phase == PodPhase.RUNNING:
+                self._stop_pod(pod, now, f"node_{reason}")
+        self.nodes.pop(name, None)
+        self._used.pop(name, None)
+        self.events.append((now, "node_remove", f"{name}:{reason}"))
+
+    def fail_node(self, name: str, now: float):
+        """Spot reclaim / hardware failure (§5): pods die with the node."""
+        self.remove_node(name, now, reason="failure")
+
+    # -- scheduling ----------------------------------------------------------
+    def _fits(self, pod: Pod, node: Node, free: dict[str, float]) -> bool:
+        for taint in node.taints:
+            if taint not in pod.tolerations:
+                return False
+        for k, want in pod.node_selector.items():
+            have = node.labels.get(k)
+            if isinstance(want, (list, tuple, set)):
+                if have not in want:
+                    return False
+            elif have != want:
+                return False
+        return all(free.get(k, 0) >= v for k, v in pod.request.items())
+
+    def _stop_pod(self, pod: Pod, now: float, reason: str):
+        if pod.phase == PodPhase.RUNNING:
+            if pod.node is not None:
+                self._use(pod.node, pod.request, -1.0)
+            if pod.on_stop is not None:
+                pod.on_stop(pod, now, reason)
+        if pod.phase in (PodPhase.RUNNING, PodPhase.PENDING):
+            pod.phase = (PodPhase.FAILED if reason != "completed"
+                         else PodPhase.SUCCEEDED)
+            pod.stopped_at = now
+            pod.stop_reason = reason
+
+    def succeed_pod(self, name: str, now: float):
+        """Worker self-termination (C2) reports success."""
+        pod = self.pods.get(name)
+        if pod is not None:
+            self._stop_pod(pod, now, "completed")
+            self.pods.pop(name, None)
+
+    def schedule(self, now: float):
+        """One scheduling pass: place pending pods (highest priority first,
+        FIFO within class); preempt lower-priority pods when allowed."""
+        pending = sorted(
+            self.pending_pods(), key=lambda p: (-p.priority, p.created_at)
+        )
+        for pod in pending:
+            placed = self._try_place(pod, now)
+            if not placed and self.enable_preemption:
+                self._try_preempt(pod, now)
+
+    def _try_place(self, pod: Pod, now: float) -> bool:
+        best: tuple[float, float, Node] | None = None
+        for node in self.nodes.values():
+            free = node.allocatable((), used=self.node_used(node.name))
+            if self._fits(pod, node, free):
+                # best-fit: least leftover gpu (then cpu) after placement
+                left_gpu = free.get("gpu", 0) - pod.request.get("gpu", 0)
+                left_cpu = free.get("cpu", 0) - pod.request.get("cpu", 0)
+                key = (left_gpu, left_cpu)
+                if best is None or key < (best[0], best[1]):
+                    best = (*key, node)
+        if best is None:
+            return False
+        node = best[2]
+        pod.phase = PodPhase.RUNNING
+        pod.node = node.name
+        self._use(node.name, pod.request, +1.0)
+        pod.started_at = now
+        if pod.on_start is not None:
+            pod.on_start(pod, now)
+        return True
+
+    def _try_preempt(self, pod: Pod, now: float) -> bool:
+        """Evict the cheapest set of strictly-lower-priority pods on some
+        node that would make room (k8s preemption, simplified)."""
+        for node in self.nodes.values():
+            victims = [
+                p for p in self.pods.values()
+                if p.node == node.name and p.phase == PodPhase.RUNNING
+                and p.priority < pod.priority
+            ]
+            if not victims:
+                continue
+            free = node.allocatable((), used=self.node_used(node.name))
+            if any(t not in pod.tolerations for t in node.taints):
+                continue
+            sel_ok = all(
+                (node.labels.get(k) in v if isinstance(v, (list, tuple, set))
+                 else node.labels.get(k) == v)
+                for k, v in pod.node_selector.items()
+            )
+            if not sel_ok:
+                continue
+            victims.sort(key=lambda p: (p.priority, -p.started_at))
+            chosen = []
+            for v in victims:
+                if all(free.get(k, 0) >= r
+                       for k, r in pod.request.items()):
+                    break
+                chosen.append(v)
+                for k, r in v.request.items():
+                    free[k] = free.get(k, 0) + r
+            if all(free.get(k, 0) >= r for k, r in pod.request.items()):
+                for v in chosen:
+                    self._stop_pod(v, now, "preempted")
+                    self.events.append((now, "preempt", v.name))
+                return self._try_place(pod, now)
+        return False
+
+    # -- accounting -----------------------------------------------------------
+    def tick_accounting(self, dt: float):
+        for node in self.nodes.values():
+            node.alive_s += dt
+            for k, v in self._used.get(node.name, {}).items():
+                node.busy_integral[k] = node.busy_integral.get(k, 0) + v * dt
+
+    def utilization(self, resource: str = "gpu") -> float:
+        """Fraction of provisioned resource-seconds actually used."""
+        cap = sum(
+            n.capacity.get(resource, 0) * n.alive_s
+            for n in self.nodes.values()
+        )
+        busy = sum(
+            n.busy_integral.get(resource, 0) for n in self.nodes.values()
+        )
+        return busy / cap if cap > 0 else 0.0

@@ -1,0 +1,137 @@
+"""Provisioner configuration: the paper's INI file format (§3, Fig 1).
+
+Example (verbatim structure from the paper)::
+
+    [DEFAULT]
+    k8s_domain=nrp-nautilus.io
+
+    [k8s]
+    tolerations_list=nautilus.io/noceph, nautilus.io/suncave
+    node_affinity_dict=^nautilus.io/low-power:true,gpu-type:A100|A40|V100
+    priority_class=opportunistic
+    envs_dict=USE_SINGULARITY:no,GLIDEIN_Site:SDSC-PRP
+
+Conventions reproduced from the paper's configurator:
+  *_list   — comma-separated values
+  *_dict   — comma-separated key:value pairs; values may be |-alternatives
+             (sets); a leading ^ on a key negates the match (anti-affinity)
+
+The [provision] section adds the scaling knobs (filter, limits, timing) and
+[condor] the pool endpoint — in the real deployment the HTCondor secret and
+central-manager address arrive via k8s secret/env (§3); here they are just
+fields.
+"""
+from __future__ import annotations
+
+import configparser
+import dataclasses
+from typing import Any
+
+from repro.core.classad import ClassAdExpr
+
+
+def _parse_list(s: str) -> tuple[str, ...]:
+    return tuple(x.strip() for x in s.split(",") if x.strip())
+
+
+def _parse_dict(s: str) -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    for item in s.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        key, _, val = item.partition(":")
+        key = key.strip()
+        alts = tuple(v.strip() for v in val.split("|"))
+        out[key] = alts[0] if len(alts) == 1 else alts
+    return out
+
+
+@dataclasses.dataclass
+class ProvisionerConfig:
+    # [condor]
+    central_manager: str = "cm.local"
+    token_secret: str = "condor-token"           # k8s secret name (§3)
+
+    # [provision]
+    job_filter: str = ""                          # ClassAd expr (C3)
+    max_pods_per_group: int = 64
+    max_total_pods: int = 256
+    submit_interval_s: float = 60.0               # reconciliation period
+    idle_timeout_s: float = 300.0                 # worker self-term (C2)
+    startup_delay_s: float = 30.0
+    group_extra_keys: tuple[str, ...] = ("arch",)
+
+    # [k8s] (Fig 1)
+    k8s_domain: str = "nrp-nautilus.io"
+    namespace: str = "osg-pool"
+    image: str = "centos:htcondor-execute-gpu"    # default execute image
+    priority_class: str = "opportunistic"
+    tolerations: tuple[str, ...] = ()
+    node_affinity: dict[str, Any] = dataclasses.field(default_factory=dict)
+    envs: dict[str, str] = dataclasses.field(default_factory=dict)
+    storage: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def filter_expr(self) -> ClassAdExpr:
+        return ClassAdExpr(self.job_filter)
+
+    def start_expr(self) -> ClassAdExpr:
+        """The pushed-down execute-side START policy (C3): same filter the
+        provisioner counts with, evaluated worker-side against the job ad
+        (worker ad is MY, job ad is TARGET)."""
+        return ClassAdExpr(self.job_filter)
+
+
+def load_ini(text: str) -> ProvisionerConfig:
+    cp = configparser.ConfigParser()
+    cp.read_string(text)
+    cfg = ProvisionerConfig()
+
+    if cp.has_section("condor") or "condor" in cp:
+        sec = cp["condor"]
+        cfg.central_manager = sec.get("central_manager", cfg.central_manager)
+        cfg.token_secret = sec.get("token_secret", cfg.token_secret)
+
+    if "provision" in cp:
+        sec = cp["provision"]
+        cfg.job_filter = sec.get("job_filter", cfg.job_filter)
+        cfg.max_pods_per_group = sec.getint(
+            "max_pods_per_group", cfg.max_pods_per_group)
+        cfg.max_total_pods = sec.getint("max_total_pods", cfg.max_total_pods)
+        cfg.submit_interval_s = sec.getfloat(
+            "submit_interval_s", cfg.submit_interval_s)
+        cfg.idle_timeout_s = sec.getfloat("idle_timeout_s", cfg.idle_timeout_s)
+        cfg.startup_delay_s = sec.getfloat(
+            "startup_delay_s", cfg.startup_delay_s)
+        if sec.get("group_extra_keys_list"):
+            cfg.group_extra_keys = _parse_list(sec["group_extra_keys_list"])
+
+    if "k8s" in cp:
+        sec = cp["k8s"]
+        cfg.k8s_domain = sec.get("k8s_domain", cfg.k8s_domain)
+        cfg.namespace = sec.get("namespace", cfg.namespace)
+        cfg.image = sec.get("image", cfg.image)
+        cfg.priority_class = sec.get("priority_class", cfg.priority_class)
+        if sec.get("tolerations_list"):
+            cfg.tolerations = _parse_list(sec["tolerations_list"])
+        if sec.get("node_affinity_dict"):
+            cfg.node_affinity = _parse_dict(sec["node_affinity_dict"])
+        if sec.get("envs_dict"):
+            cfg.envs = {k: str(v) for k, v in
+                        _parse_dict(sec["envs_dict"]).items()}
+        if sec.get("storage_dict"):
+            cfg.storage = {k: str(v) for k, v in
+                           _parse_dict(sec["storage_dict"]).items()}
+    return cfg
+
+
+PAPER_EXAMPLE_INI = """\
+[DEFAULT]
+k8s_domain=nrp-nautilus.io
+
+[k8s]
+tolerations_list=nautilus.io/noceph, nautilus.io/suncave
+node_affinity_dict=^nautilus.io/low-power:true,gpu-type:A100|A40|V100
+priority_class=opportunistic
+envs_dict=USE_SINGULARITY:no,GLIDEIN_Site:SDSC-PRP
+"""

@@ -1,0 +1,126 @@
+"""The schedd: job queue with HTCondor-like job states and ads.
+
+Jobs are pleasantly-parallel work units (the paper's OSG payload model).
+Each job carries an ad (requirements + arbitrary advertised attributes) and
+a simulated runtime; the "real mode" used by the examples attaches a
+work_fn that advances actual JAX training steps instead.
+
+Preemption semantics (paper §5): a preempted job transparently returns to
+IDLE and reruns elsewhere; `preempt_count` and total wasted work are
+tracked for the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Any, Callable
+
+from repro.core.classad import ClassAdExpr
+
+
+class JobState(enum.Enum):
+    IDLE = "idle"
+    RUNNING = "running"
+    COMPLETED = "completed"
+    HELD = "held"
+    REMOVED = "removed"
+
+
+@dataclasses.dataclass
+class Job:
+    ad: dict[str, Any]
+    runtime_s: float = 60.0
+    requirements: ClassAdExpr | None = None
+    work_fn: Callable[["Job", float], bool] | None = None  # (job, dt) -> done
+    jid: int = -1
+
+    # lifecycle
+    state: JobState = JobState.IDLE
+    submitted_at: float = 0.0
+    started_at: float = -1.0          # first claim (wait-time metric)
+    attempt_started_at: float = -1.0  # latest claim (straggler detection)
+    completed_at: float = -1.0
+    remaining_s: float = dataclasses.field(default=-1.0)
+    preempt_count: int = 0
+    wasted_s: float = 0.0         # work lost to preemption
+    claimed_by: str | None = None
+
+    def __post_init__(self):
+        if self.remaining_s < 0:
+            self.remaining_s = self.runtime_s
+
+
+class JobQueue:
+    """Single schedd. The provisioner and the workers both query it — the
+    workers through the collector's matchmaking (worker.py)."""
+
+    def __init__(self):
+        self._jobs: dict[int, Job] = {}
+        self._ids = itertools.count()
+        self.completed_log: list[Job] = []
+
+    def submit(self, job: Job, now: float = 0.0) -> int:
+        job.jid = next(self._ids)
+        job.submitted_at = now
+        job.state = JobState.IDLE
+        self._jobs[job.jid] = job
+        return job.jid
+
+    def jobs(self, state: JobState | None = None) -> list[Job]:
+        if state is None:
+            return list(self._jobs.values())
+        return [j for j in self._jobs.values() if j.state == state]
+
+    def idle_jobs(self) -> list[Job]:
+        return self.jobs(JobState.IDLE)
+
+    def get(self, jid: int) -> Job:
+        return self._jobs[jid]
+
+    # -- transitions (driven by workers) -------------------------------------
+    def claim(self, jid: int, worker_name: str, now: float) -> Job:
+        job = self._jobs[jid]
+        assert job.state == JobState.IDLE, (jid, job.state)
+        job.state = JobState.RUNNING
+        job.claimed_by = worker_name
+        job.attempt_started_at = now
+        if job.started_at < 0:
+            job.started_at = now
+        return job
+
+    def complete(self, jid: int, now: float):
+        job = self._jobs.pop(jid)
+        job.state = JobState.COMPLETED
+        job.completed_at = now
+        job.claimed_by = None
+        self.completed_log.append(job)
+
+    def release(self, jid: int, now: float, *, preempted: bool = True):
+        """Job returns to IDLE (preemption / worker death). Progress on the
+        current attempt is lost — HTCondor restarts vanilla-universe jobs."""
+        job = self._jobs[jid]
+        if job.state != JobState.RUNNING:
+            return
+        if preempted:
+            job.preempt_count += 1
+            done = job.runtime_s - job.remaining_s  # progress so far
+            # Jobs restart from scratch (HTCondor vanilla universe) unless
+            # they self-checkpoint (OSG best practice; our JAX training
+            # jobs do): then only progress past the last boundary is lost.
+            ckpt_every = job.ad.get("checkpoint_interval_s") or 0
+            kept = (done // ckpt_every) * ckpt_every if ckpt_every else 0.0
+            job.wasted_s += done - kept
+            job.remaining_s = job.runtime_s - kept
+        job.state = JobState.IDLE
+        job.claimed_by = None
+
+    # -- stats ----------------------------------------------------------------
+    def n_idle(self) -> int:
+        return len(self.idle_jobs())
+
+    def n_running(self) -> int:
+        return len(self.jobs(JobState.RUNNING))
+
+    def drained(self) -> bool:
+        return not self._jobs

@@ -1,0 +1,105 @@
+"""Time-series + summary metrics for the provisioning experiments.
+
+Records per-tick gauges (queue depth, pods pending/running, workers busy,
+nodes live) and derives the paper's headline quantities:
+
+  * demand-tracking lag (Fig 3): time from a job arriving idle to a worker
+    slot being available for its group
+  * harvested compute (Fig 2): busy resource-seconds on provisioned pods
+  * utilization / waste: busy / alive on workers, empty-node fraction
+  * scale-down latency (C2): worker idle time before self-termination
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class Recorder:
+    series: dict[str, list[tuple[float, float]]] = dataclasses.field(
+        default_factory=dict)
+
+    def record(self, now: float, **gauges: float):
+        for key, val in gauges.items():
+            self.series.setdefault(key, []).append((now, float(val)))
+
+    def values(self, key: str) -> list[float]:
+        return [v for _, v in self.series.get(key, [])]
+
+    def times(self, key: str) -> list[float]:
+        return [t for t, _ in self.series.get(key, [])]
+
+    def last(self, key: str, default: float = 0.0) -> float:
+        s = self.series.get(key)
+        return s[-1][1] if s else default
+
+    def integral(self, key: str) -> float:
+        """Trapezoid integral of a gauge over time."""
+        s = self.series.get(key, [])
+        out = 0.0
+        for (t0, v0), (t1, v1) in zip(s, s[1:]):
+            out += 0.5 * (v0 + v1) * (t1 - t0)
+        return out
+
+    def mean(self, key: str) -> float:
+        v = self.values(key)
+        return sum(v) / len(v) if v else 0.0
+
+    def max(self, key: str) -> float:
+        v = self.values(key)
+        return max(v) if v else 0.0
+
+    # -- derived summaries ------------------------------------------------------
+    def tracking_lag(self, demand_key: str, supply_key: str,
+                     threshold: float = 0.95) -> float:
+        """Mean time for supply to reach `threshold`×(new demand level) after
+        each upward demand step."""
+        dem = self.series.get(demand_key, [])
+        sup = self.series.get(supply_key, [])
+        if not dem or not sup:
+            return 0.0
+        lags = []
+        prev = dem[0][1]
+        for (t, v) in dem[1:]:
+            if v > prev:  # upward step
+                target = threshold * v
+                t_hit = None
+                for (ts, vs) in sup:
+                    if ts >= t and vs >= target:
+                        t_hit = ts
+                        break
+                if t_hit is not None:
+                    lags.append(t_hit - t)
+            prev = v
+        return sum(lags) / len(lags) if lags else 0.0
+
+
+def summarize_jobs(completed: list, now: float) -> dict[str, Any]:
+    if not completed:
+        return {"n": 0}
+    waits = [j.started_at - j.submitted_at for j in completed
+             if j.started_at >= 0]
+    wasted = sum(j.wasted_s for j in completed)
+    done_work = sum(j.runtime_s for j in completed)
+    return {
+        "n": len(completed),
+        "mean_wait_s": sum(waits) / len(waits) if waits else 0.0,
+        "p95_wait_s": sorted(waits)[int(0.95 * (len(waits) - 1))]
+        if waits else 0.0,
+        "preemptions": sum(j.preempt_count for j in completed),
+        "wasted_s": wasted,
+        "goodput": done_work / (done_work + wasted)
+        if done_work + wasted > 0 else 1.0,
+    }
+
+
+def summarize_workers(workers: list) -> dict[str, Any]:
+    alive = sum(w.alive_s for w in workers)
+    busy = sum(w.busy_s for w in workers)
+    return {
+        "n_workers": len(workers),
+        "alive_s": alive,
+        "busy_s": busy,
+        "utilization": busy / alive if alive > 0 else 0.0,
+    }

@@ -1,0 +1,184 @@
+"""The auto-scaling provisioning service (paper §2–§3).
+
+Reconciliation loop (C1), run every ``submit_interval_s``:
+
+  1. snapshot idle jobs; keep those passing the job filter (C3)
+  2. group them by requirement signature (C4)
+  3. per group:  deficit = n_idle − (pending pods of the group
+                                     + unclaimed ready workers of the group)
+  4. submit ``min(deficit, limits)`` pods whose requests equal the
+     signature and whose START expression is the pushed-down filter
+
+Scale-down is NOT here: workers self-terminate when idle (C2, worker.py),
+exactly as in the paper ("pods are configured to self-terminate if no user
+jobs are waiting").  The provisioner also never deletes pending pods by
+default — HTCondor demand is bursty and a pending pod is free; an optional
+``cancel_stale_pending_s`` reaps pods pending longer than the horizon
+(useful with the node autoscaler off).
+
+Anti-affinity convention from the paper's INI (config.py): node_affinity
+keys starting with ^ must NOT match.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable
+
+from repro.core.classad import ClassAdExpr
+from repro.core.cluster import KubeCluster, Pod, PodPhase
+from repro.core.config import ProvisionerConfig
+from repro.core.groups import (
+    GroupSignature, group_jobs, matches_signature, signature_of,
+)
+from repro.core.jobqueue import JobQueue
+from repro.core.worker import Collector, Worker
+
+
+@dataclasses.dataclass
+class ProvisionStats:
+    submitted: int = 0
+    reaped_pending: int = 0
+    per_group_submitted: dict = dataclasses.field(default_factory=dict)
+
+
+class Provisioner:
+    """One instance per (HTCondor pool, Kubernetes namespace) pair — the
+    paper's operation mode (a); mode (b) layers a dedicated local pool in
+    front (see examples/grid_portal.py)."""
+
+    def __init__(
+        self,
+        cfg: ProvisionerConfig,
+        queue: JobQueue,
+        collector: Collector,
+        cluster: KubeCluster,
+        *,
+        cancel_stale_pending_s: float | None = None,
+        worker_factory: Callable[..., Worker] | None = None,
+    ):
+        self.cfg = cfg
+        self.queue = queue
+        self.collector = collector
+        self.cluster = cluster
+        self.filter = cfg.filter_expr()
+        self.start_expr = cfg.start_expr()
+        self.cancel_stale_pending_s = cancel_stale_pending_s
+        self.worker_factory = worker_factory
+        self._ids = itertools.count()
+        self._last_run = -1e18
+        self.stats = ProvisionStats()
+
+    # -- helpers --------------------------------------------------------------
+    def _pod_group_label(self, sig: GroupSignature) -> str:
+        return f"grp-{abs(hash(sig)) % 10**10:010d}"
+
+    def _group_pending(self, label: str) -> int:
+        return len(self.cluster.pending_pods(
+            lambda p: p.labels.get("provision-group") == label
+        ))
+
+    def _group_unclaimed(self, sig: GroupSignature) -> int:
+        return self.collector.unclaimed_capacity(
+            lambda ad: matches_signature(ad, sig)
+        )
+
+    def _total_live_pods(self) -> int:
+        return len([
+            p for p in self.cluster.pods.values()
+            if p.phase in (PodPhase.PENDING, PodPhase.RUNNING)
+            and p.labels.get("owner") == "prp-provisioner"
+        ])
+
+    # -- the loop body ----------------------------------------------------------
+    def reconcile(self, now: float) -> ProvisionStats:
+        """One pass of the provisioning logic. Idempotent at fixed demand."""
+        stats = ProvisionStats()
+
+        idle = [j for j in self.queue.idle_jobs()
+                if self.filter.evaluate(j.ad)]
+        groups = group_jobs(idle)
+
+        for sig, jobs in sorted(
+            groups.items(), key=lambda kv: -len(kv[1])
+        ):
+            label = self._pod_group_label(sig)
+            pending = self._group_pending(label)
+            unclaimed = self._group_unclaimed(sig)
+            deficit = len(jobs) - pending - unclaimed
+            if deficit <= 0:
+                continue
+            room_group = self.cfg.max_pods_per_group - pending
+            room_total = self.cfg.max_total_pods - self._total_live_pods()
+            n = max(0, min(deficit, room_group, room_total))
+            for _ in range(n):
+                self._submit_pod(sig, label, now)
+            if n:
+                stats.submitted += n
+                stats.per_group_submitted[sig] = n
+
+        if self.cancel_stale_pending_s is not None:
+            for pod in self.cluster.pending_pods(
+                lambda p: p.labels.get("owner") == "prp-provisioner"
+            ):
+                if now - pod.created_at > self.cancel_stale_pending_s:
+                    self.cluster.delete_pod(pod.name, now, "stale_pending")
+                    stats.reaped_pending += 1
+
+        self.stats.submitted += stats.submitted
+        self.stats.reaped_pending += stats.reaped_pending
+        return stats
+
+    def maybe_reconcile(self, now: float) -> ProvisionStats | None:
+        if now - self._last_run >= self.cfg.submit_interval_s:
+            self._last_run = now
+            return self.reconcile(now)
+        return None
+
+    # -- pod/worker wiring --------------------------------------------------------
+    def _submit_pod(self, sig: GroupSignature, label: str, now: float):
+        name = f"htc-exec-{next(self._ids)}"
+        worker_ad = sig.as_worker_ad()
+        worker_ad.update(self.cfg.envs)  # advertised extra attrs (Fig 1)
+
+        factory = self.worker_factory or Worker
+        worker = factory(
+            name=name,
+            ad=worker_ad,
+            start_expr=self.start_expr,
+            idle_timeout=self.cfg.idle_timeout_s,
+            startup_delay=self.cfg.startup_delay_s,
+            pod_name=name,
+        )
+
+        def on_start(pod: Pod, t: float, *, _w=worker):
+            _w.booted_at = t + _w.startup_delay
+            self.collector.advertise(_w)
+
+        def on_stop(pod: Pod, t: float, reason: str, *, _w=worker):
+            if reason != "completed":
+                from repro.core.worker import kill_worker
+                kill_worker(self.collector, self.queue, _w.name, t)
+
+        selector = {}
+        anti = {}
+        for k, v in self.cfg.node_affinity.items():
+            if k.startswith("^"):
+                anti[k[1:]] = v
+            else:
+                selector[k] = v
+        pod = Pod(
+            name=name,
+            request=sig.as_pod_request(),
+            priority_class=self.cfg.priority_class,
+            tolerations=self.cfg.tolerations,
+            node_selector=selector,
+            labels={
+                "owner": "prp-provisioner",
+                "provision-group": label,
+                **({"anti-affinity": ",".join(anti)} if anti else {}),
+            },
+            on_start=on_start,
+            on_stop=on_stop,
+        )
+        self.cluster.create_pod(pod, now)

@@ -1,0 +1,250 @@
+"""Discrete-time simulation harness wiring all control-plane components.
+
+One `Simulation` owns: JobQueue (schedd), Collector (pool), KubeCluster,
+Provisioner, optional NodeAutoscaler, optional fault injectors, and a
+Recorder.  `run(until)` advances in fixed ticks; each tick:
+
+  1. external events (job arrivals, spot reclaims) fire
+  2. provisioner reconciles (at its own interval)  — C1/C3/C4
+  3. node autoscaler ticks                          — C7
+  4. kube scheduler places pods (priorities/preemption) — §5
+  5. negotiator matches idle jobs to ready workers
+  6. workers advance claimed jobs; self-terminate when idle — C2
+  7. metrics are recorded
+
+The same Provisioner/Worker code runs under wall-clock in the examples
+(launch/train.py elastic mode) — the simulator only replaces the clock and
+the job payloads, not the decision logic (paper-faithfulness hinges on
+this separation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable
+
+import numpy as np
+
+from repro.core.cluster import KubeCluster, Node, PodPhase
+from repro.core.config import ProvisionerConfig
+from repro.core.jobqueue import Job, JobQueue
+from repro.core.metrics import Recorder, summarize_jobs, summarize_workers
+from repro.core.nodescaler import NodeAutoscaler, NodeTemplate
+from repro.core.provisioner import Provisioner
+from repro.core.stragglers import StragglerPolicy
+from repro.core.worker import Collector, advance_workers, kill_worker
+
+
+@dataclasses.dataclass
+class TimedEvent:
+    at: float
+    fn: Callable[["Simulation", float], None]
+    name: str = ""
+
+
+class Simulation:
+    def __init__(
+        self,
+        cfg: ProvisionerConfig,
+        *,
+        nodes: list[Node] | None = None,
+        node_template: NodeTemplate | None = None,
+        max_nodes: int = 64,
+        tick_s: float = 5.0,
+        negotiate_interval_s: float = 15.0,
+        seed: int = 0,
+        straggler_policy: StragglerPolicy | None = None,
+    ):
+        self.cfg = cfg
+        self.tick_s = tick_s
+        self.negotiate_interval_s = negotiate_interval_s
+        self.queue = JobQueue()
+        self.collector = Collector()
+        self.cluster = KubeCluster(nodes or [])
+        self.provisioner = Provisioner(
+            cfg, self.queue, self.collector, self.cluster
+        )
+        self.autoscaler = (
+            NodeAutoscaler(self.cluster, node_template, max_nodes=max_nodes)
+            if node_template is not None else None
+        )
+        self.straggler_policy = straggler_policy
+        self.recorder = Recorder()
+        self.events: list[TimedEvent] = []
+        self.now = 0.0
+        self._last_negotiate = -1e18
+        self.rng = np.random.default_rng(seed)
+        self.all_workers: list = []  # includes terminated (for accounting)
+
+        # track every worker the provisioner makes
+        orig_factory = self.provisioner.worker_factory
+        from repro.core.worker import Worker as _W
+
+        def tracking_factory(**kw):
+            w = (orig_factory or _W)(**kw)
+            self.all_workers.append(w)
+            return w
+
+        self.provisioner.worker_factory = tracking_factory
+
+    # -- event helpers -------------------------------------------------------
+    def at(self, t: float, fn: Callable[["Simulation", float], None],
+           name: str = ""):
+        self.events.append(TimedEvent(t, fn, name))
+
+    def submit_jobs(self, t: float, jobs: Iterable[Job]):
+        jobs = list(jobs)
+
+        def fire(sim: "Simulation", now: float):
+            for j in jobs:
+                sim.queue.submit(j, now)
+
+        self.at(t, fire, name=f"submit x{len(jobs)}")
+
+    def inject_node_failure(self, t: float, node_name: str | None = None):
+        def fire(sim: "Simulation", now: float):
+            names = list(sim.cluster.nodes)
+            if not names:
+                return
+            target = node_name or names[
+                int(sim.rng.integers(0, len(names)))
+            ]
+            sim.cluster.fail_node(target, now)
+
+        self.at(t, fire, name="node_failure")
+
+    def inject_slow_workers(self, t: float, frac: float = 0.3,
+                            rate: float = 0.2):
+        """Degrade a fraction of BUSY workers to `rate` speed (straggling
+        nodes: thermal throttling, failing HBM, noisy neighbours)."""
+
+        def fire(sim: "Simulation", now: float):
+            busy = [w for w in sim.collector.workers.values() if w.claimed]
+            k = max(1, int(len(busy) * frac)) if busy else 0
+            idx = sim.rng.permutation(len(busy))[:k]
+            for i in idx:
+                busy[i].work_rate = rate
+
+        self.at(t, fire, name="slow_workers")
+
+    def inject_pod_preemption(self, t: float, frac: float = 0.5):
+        """Spot-style reclaim of a fraction of running provisioner pods."""
+
+        def fire(sim: "Simulation", now: float):
+            pods = sim.cluster.running_pods(
+                lambda p: p.labels.get("owner") == "prp-provisioner"
+            )
+            k = max(1, int(len(pods) * frac)) if pods else 0
+            idx = sim.rng.permutation(len(pods))[:k]
+            for i in idx:
+                sim.cluster.delete_pod(pods[i].name, now, "preempted")
+
+        self.at(t, fire, name="pod_preemption")
+
+    # -- main loop --------------------------------------------------------------
+    def step(self):
+        now, dt = self.now, self.tick_s
+
+        # 1. external events
+        due = [e for e in self.events if e.at <= now]
+        self.events = [e for e in self.events if e.at > now]
+        for e in sorted(due, key=lambda e: e.at):
+            e.fn(self, now)
+
+        # 2. provisioner
+        self.provisioner.maybe_reconcile(now)
+
+        # 3. node autoscaler
+        if self.autoscaler is not None:
+            self.autoscaler.tick(now, dt)
+
+        # 4. kube scheduling + accounting
+        self.cluster.schedule(now)
+        self.cluster.tick_accounting(dt)
+
+        # 5. negotiation
+        if now - self._last_negotiate >= self.negotiate_interval_s:
+            self.collector.negotiate(self.queue, now)
+            self._last_negotiate = now
+
+        # 6. workers advance
+        advance_workers(self.collector, self.queue, self.cluster, now, dt)
+
+        # 6b. straggler mitigation (beyond-paper; see core/stragglers.py)
+        if self.straggler_policy is not None:
+            self.straggler_policy.tick(self.queue, self.collector,
+                                       self.cluster, now)
+
+        # 7. metrics
+        self.recorder.record(
+            now,
+            idle_jobs=self.queue.n_idle(),
+            running_jobs=self.queue.n_running(),
+            pending_pods=len(self.cluster.pending_pods()),
+            running_pods=len(self.cluster.running_pods()),
+            ready_workers=len(self.collector.alive_workers(now)),
+            busy_workers=sum(
+                1 for w in self.collector.workers.values() if w.claimed
+            ),
+            live_nodes=len(self.cluster.nodes),
+        )
+        self.now += dt
+
+    def run(self, until: float):
+        while self.now < until:
+            self.step()
+
+    def run_until_drained(self, max_t: float = 1e6):
+        while ((self.events or not self.queue.drained())
+               and self.now < max_t):
+            self.step()
+
+    # -- summaries -----------------------------------------------------------------
+    def summary(self) -> dict[str, Any]:
+        out: dict[str, Any] = {}
+        out["jobs"] = summarize_jobs(self.queue.completed_log, self.now)
+        out["workers"] = summarize_workers(self.all_workers)
+        out["pods_submitted"] = self.provisioner.stats.submitted
+        if self.autoscaler is not None:
+            out["nodes"] = {
+                "provisioned": self.autoscaler.provisioned_total,
+                "deprovisioned": self.autoscaler.deprovisioned_total,
+                "waste_fraction": self.autoscaler.waste_fraction(),
+            }
+        out["gpu_utilization"] = self.cluster.utilization("gpu")
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Convenience builders used by benchmarks/examples
+# ---------------------------------------------------------------------------
+
+def gpu_job(runtime_s: float, *, gpus: int = 1, cpus: int = 1,
+            memory_gb: int = 4, arch: str | None = None,
+            checkpoint_interval_s: float | None = None,
+            extra_ad: dict | None = None) -> Job:
+    ad: dict[str, Any] = {
+        "request_cpus": cpus,
+        "request_gpus": gpus,
+        "request_memory": memory_gb,
+        "request_disk": 8,
+    }
+    if arch is not None:
+        ad["arch"] = arch
+    if checkpoint_interval_s:
+        ad["checkpoint_interval_s"] = checkpoint_interval_s
+    ad.update(extra_ad or {})
+    return Job(ad=ad, runtime_s=runtime_s)
+
+
+def onprem_nodes(n: int, *, gpus: int = 8, cpus: int = 64,
+                 memory_gb: int = 512, labels: dict | None = None,
+                 prefix: str = "onprem") -> list[Node]:
+    return [
+        Node(
+            name=f"{prefix}-{i}",
+            capacity={"cpu": cpus, "gpu": gpus, "memory": memory_gb,
+                      "disk": 1024},
+            labels=dict(labels or {}),
+        )
+        for i in range(n)
+    ]

@@ -1,0 +1,188 @@
+"""HTCondor execute side: startd workers + the collector/negotiator.
+
+A Worker is the HTCondor execute service living inside a Kubernetes pod.
+Lifecycle (paper §2):
+
+  pod PENDING -> pod RUNNING -> startd boots (startup_delay) -> advertises
+  to the collector -> claims matching idle jobs (START expr, pushed down
+  from the provisioner per C3) -> runs them -> when no matching idle job
+  exists for `idle_timeout` seconds, SELF-TERMINATES (C2) -> pod succeeds.
+
+Partitionable-slot semantics: a worker claims as many jobs as fit its
+resources simultaneously (cpus/gpus/chips), like a partitionable startd
+slot — one pod can serve several 1-GPU jobs on an 8-GPU request.
+
+The collector is the pool registry; `negotiate()` is a single matchmaking
+cycle pairing idle jobs with unclaimed worker capacity (symmetric_match:
+job.Requirements against the worker ad AND the worker START against the
+job ad).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+from repro.core.classad import ClassAdExpr, symmetric_match
+from repro.core.jobqueue import Job, JobQueue, JobState
+
+
+@dataclasses.dataclass
+class Worker:
+    name: str
+    ad: dict[str, Any]                       # resources + advertised attrs
+    start_expr: ClassAdExpr                  # pushed-down filter (C3)
+    idle_timeout: float = 300.0
+    startup_delay: float = 30.0
+    pod_name: str | None = None
+    work_rate: float = 1.0          # <1.0 models a straggling node
+
+    booted_at: float = -1.0                  # when startd became ready
+    idle_since: float = -1.0
+    claimed: dict[int, Job] = dataclasses.field(default_factory=dict)
+    terminated: bool = False
+    # accounting
+    busy_s: float = 0.0
+    alive_s: float = 0.0
+
+    def ready(self, now: float) -> bool:
+        return self.booted_at >= 0 and now >= self.booted_at and not self.terminated
+
+    def free_resources(self) -> dict[str, float]:
+        free = dict(self.ad)
+        for job in self.claimed.values():
+            for res in ("cpus", "gpus", "memory", "disk", "chips", "hbm_gb"):
+                want = job.ad.get(f"request_{res}", 0) or 0
+                if res in free and isinstance(free[res], (int, float)):
+                    free[res] = free[res] - want
+        return free
+
+    def offer_ad(self) -> dict[str, Any]:
+        """Current (partial-slot) offer: remaining resources + attrs."""
+        return self.free_resources()
+
+
+class Collector:
+    """Pool registry + negotiator."""
+
+    def __init__(self):
+        self.workers: dict[str, Worker] = {}
+        self._ids = itertools.count()
+
+    def advertise(self, worker: Worker):
+        self.workers[worker.name] = worker
+
+    def invalidate(self, name: str):
+        self.workers.pop(name, None)
+
+    def alive_workers(self, now: float) -> list[Worker]:
+        return [w for w in self.workers.values() if w.ready(now)]
+
+    def unclaimed_capacity(self, group_matcher=None) -> int:
+        """Workers with zero claims (counted by the provisioner against the
+        deficit so it never over-submits; paper §2)."""
+        n = 0
+        for w in self.workers.values():
+            if w.terminated or w.claimed:
+                continue
+            if group_matcher is None or group_matcher(w.ad):
+                n += 1
+        return n
+
+    def negotiate(self, queue: JobQueue, now: float) -> int:
+        """One matchmaking cycle. Returns number of new claims.
+
+        Workers with no free capacity drop out of the candidate list as
+        they fill — keeps a full-pool cycle O(idle × free_workers)."""
+        claims = 0
+        idle = sorted(queue.idle_jobs(), key=lambda j: j.submitted_at)
+        candidates = list(self.alive_workers(now))
+        for job in idle:
+            if not candidates:
+                break
+            matched = None
+            for w in candidates:
+                if symmetric_match(job.ad, w.offer_ad(),
+                                   job.requirements, w.start_expr):
+                    matched = w
+                    break
+            if matched is None:
+                continue
+            queue.claim(job.jid, matched.name, now)
+            matched.claimed[job.jid] = job
+            matched.idle_since = -1.0
+            claims += 1
+            free = matched.free_resources()
+            exhausted = any(
+                isinstance(v, (int, float)) and v <= 0
+                for k, v in free.items()
+                if k in ("cpus", "gpus", "chips") and matched.ad.get(k)
+            )
+            if exhausted:
+                candidates.remove(matched)
+        return claims
+
+
+def advance_workers(
+    collector: Collector,
+    queue: JobQueue,
+    cluster,
+    now: float,
+    dt: float,
+) -> list[str]:
+    """Advance all workers by dt: run claimed jobs, complete them, start the
+    idle-timeout clock, self-terminate (C2).  Returns names of workers that
+    self-terminated this tick."""
+    terminated = []
+    for w in list(collector.workers.values()):
+        if w.terminated:
+            continue
+        if not w.ready(now):
+            continue
+        w.alive_s += dt
+        if w.claimed:
+            w.busy_s += dt
+        # advance claimed jobs
+        for jid, job in list(w.claimed.items()):
+            if job.work_fn is not None:
+                done = job.work_fn(job, dt)
+            else:
+                job.remaining_s -= dt * w.work_rate
+                done = job.remaining_s <= 1e-9
+            if done:
+                queue.complete(jid, now + dt)
+                w.claimed.pop(jid)
+        if w.claimed:
+            w.idle_since = -1.0
+            continue
+        # idle: does any matching idle job exist? (C2 poll)
+        has_match = any(
+            symmetric_match(j.ad, w.offer_ad(), j.requirements, w.start_expr)
+            for j in queue.idle_jobs()
+        )
+        if has_match:
+            w.idle_since = -1.0  # negotiator will claim next cycle
+            continue
+        if w.idle_since < 0:
+            w.idle_since = now
+        elif now + dt - w.idle_since >= w.idle_timeout:
+            w.terminated = True
+            terminated.append(w.name)
+            collector.invalidate(w.name)
+            if w.pod_name is not None and cluster is not None:
+                cluster.succeed_pod(w.pod_name, now + dt)
+    return terminated
+
+
+def kill_worker(collector: Collector, queue: JobQueue, worker_name: str,
+                now: float):
+    """Pod/node preemption path (§5): release claimed jobs back to IDLE;
+    HTCondor reschedules them transparently."""
+    w = collector.workers.get(worker_name)
+    if w is None:
+        return
+    for jid in list(w.claimed):
+        queue.release(jid, now, preempted=True)
+    w.claimed.clear()
+    w.terminated = True
+    collector.invalidate(worker_name)

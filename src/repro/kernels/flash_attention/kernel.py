@@ -1,0 +1,197 @@
+"""Pallas TPU flash attention (GQA, position-masked, online softmax).
+
+Tiling: grid = (B, Hkv, nq, nk) with the kv dimension innermost and
+sequential ("arbitrary"); everything else is parallel.  Per grid step the
+kernel holds in VMEM:
+
+  q    (BQ, G, Dh)   one query block for all G = Hq//Hkv heads of the group
+  k,v  (BK, Dh)      one kv block of the group's single kv head
+  acc  (BQ*G, Dh) f32 scratch — online-softmax numerator
+  m, l (BQ*G, 1)  f32 scratch — running max / denominator
+
+BQ = BK = 128 keeps every matmul MXU-shaped ((BQ*G,Dh)x(Dh,BK) and
+(BQ*G,BK)x(BK,Dh)) and the working set well under VMEM (~(2*BQ*G*Dh +
+2*BK*Dh + BQ*G*BK) * 4B ≈ 1.3 MB for G=8, Dh=128).
+
+The mask is position-driven (see ref.py): kv_pos == -1 marks empty cache
+slots, `causal` compares absolute positions, `window` bounds their
+distance.  Blocks that are fully masked skip both matmuls via pl.when —
+with the standard training layout (q_pos = kv_pos = arange) this prunes the
+upper-triangular half of the grid's FLOPs at run time.
+
+Wrapper pads Sq/Skv to block multiples (padded kv slots get kv_pos = -1 so
+they are masked; padded q rows are sliced off) and pads G to a multiple of
+8 sublanes when needed by duplicating heads (sliced off on return).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _attn_kernel(
+    q_pos_ref,    # (1, BQ) int32
+    kv_pos_ref,   # (1, BK) int32
+    q_ref,        # (1, BQ, 1, G, Dh)
+    k_ref,        # (1, BK, 1, Dh)
+    v_ref,        # (1, BK, 1, Dh)
+    o_ref,        # (1, BQ, 1, G, Dh)
+    acc_ref,      # (BQ*G, Dh) f32 scratch
+    m_ref,        # (BQ*G, 1) f32 scratch
+    l_ref,        # (BQ*G, 1) f32 scratch
+    *,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    scale: float,
+    nk: int,
+):
+    ik = pl.program_id(3)
+    BQ, G, Dh = q_ref.shape[1], q_ref.shape[3], q_ref.shape[4]
+    BK = k_ref.shape[1]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qp = q_pos_ref[0, :]                 # (BQ,)
+    kp = kv_pos_ref[0, :]                # (BK,)
+    mask = (kp >= 0)[None, :]            # (1, BK)
+    mask = jnp.broadcast_to(mask, (BQ, BK))
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        mask &= (qp[:, None] - kp[None, :]) < window
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(BQ * G, Dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (BK, Dh)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                        # (BQ*G, BK)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mG = jnp.broadcast_to(
+            mask[:, None, :], (BQ, G, BK)
+        ).reshape(BQ * G, BK)
+        s = jnp.where(mG, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (BQ*G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_new = jnp.maximum(m_new, NEG_INF / 2)          # fully-masked guard
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mG, p, 0.0)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out = (acc_ref[...] / l).reshape(BQ, G, Dh)
+        o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "scale", "block_q", "block_k",
+        "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BQ,
+    block_k: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+
+    BQ = min(block_q, max(Sq, 8))
+    BK = min(block_k, max(Skv, 8))
+
+    # (B, Sq, Hkv, G, Dh): group-major head layout is contiguous in Hq
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    qg = _pad_to(qg, 1, BQ)
+    kp_ = _pad_to(k, 1, BK)
+    vp_ = _pad_to(v, 1, BK)
+    qpos = _pad_to(q_pos.astype(jnp.int32), 1, BQ)
+    kpos = _pad_to(kv_pos.astype(jnp.int32), 1, BK, value=-1)
+    Sqp, Skp = qg.shape[1], kp_.shape[1]
+    nq, nk = Sqp // BQ, Skp // BK
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal, window=window, softcap=softcap, scale=scale, nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, BQ), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, BK), lambda b, h, iq, ik: (b, ik)),
+            pl.BlockSpec((1, BQ, 1, G, Dh),
+                         lambda b, h, iq, ik: (b, iq, h, 0, 0)),
+            pl.BlockSpec((1, BK, 1, Dh), lambda b, h, iq, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, BK, 1, Dh), lambda b, h, iq, ik: (b, ik, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, BQ, 1, G, Dh), lambda b, h, iq, ik: (b, iq, h, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Sqp, Hkv, G, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ * G, Dh), jnp.float32),
+            pltpu.VMEM((BQ * G, 1), jnp.float32),
+            pltpu.VMEM((BQ * G, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qpos, kpos, qg, kp_, vp_)
+    out = out[:, :Sq].reshape(B, Sq, Hq, Dh)
+    return out

@@ -1,0 +1,106 @@
+"""Jit'd attention entry point.
+
+Dispatch policy:
+  * TPU backend            -> Pallas flash kernel (kernel.py)
+  * anything else (CPU dry-run, tests) -> memory-bounded chunked jnp path
+
+The chunked path scans over query blocks so the (Sq, Skv) score matrix is
+never fully materialized — this is what lets the 32k-prefill dry-run cells
+fit the per-device HBM budget even without the Pallas kernel in the lowered
+HLO (Pallas TPU kernels cannot lower on the CPU dry-run backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import NEG_INF, attention_reference
+
+# Score-block element budget for the chunked path (chunk × Skv elements,
+# before batch/head dims; bounds the transient fp32 score tensor so the
+# 32k-prefill dry-run cells stay within per-device HBM).
+_CHUNK_BUDGET = 1 << 21
+
+# Analysis-mode switch (launch/dryrun.py): the chunked path hides its FLOPs
+# inside a lax.scan body that XLA cost analysis counts only once; forcing
+# the dense reference makes the lowered module's cost exact.  Never set in
+# production paths.
+FORCE_REFERENCE = False
+
+
+def _pick_q_chunk(sq: int, skv: int) -> int:
+    if sq <= 128:
+        return sq
+    c = max(1, _CHUNK_BUDGET // max(skv, 1))
+    c = min(c, 1024, sq)
+    # largest power of two <= c that divides sq
+    while c > 1 and sq % c != 0:
+        c //= 2
+    return max(c, 1)
+
+
+def _chunked_attention(
+    q, k, v, q_pos, kv_pos, *, causal, window, softcap, scale
+):
+    B, Sq, Hq, Dh = q.shape
+    chunk = _pick_q_chunk(Sq, k.shape[1])
+    if chunk == Sq or FORCE_REFERENCE:
+        return attention_reference(
+            q, k, v, q_pos, kv_pos,
+            causal=causal, window=window, softcap=softcap, scale=scale,
+        )
+    n = Sq // chunk
+    qs = q.reshape(B, n, chunk, Hq, Dh).swapaxes(0, 1)
+    qp = q_pos.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        qc, qpc = xs
+        out = attention_reference(
+            qc, k, v, qpc, kv_pos,
+            causal=causal, window=window, softcap=softcap, scale=scale,
+        )
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (qs, qp))
+    return outs.swapaxes(0, 1).reshape(B, Sq, Hq, Dh)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "backend"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    backend: str = "auto",
+) -> jax.Array:
+    """Position-masked GQA attention. See ref.py for semantics."""
+    use_pallas = False
+    if backend == "pallas":
+        use_pallas = True
+    elif backend == "auto":
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+        return flash_attention_pallas(
+            q, k, v, q_pos, kv_pos,
+            causal=causal, window=window, softcap=softcap, scale=scale,
+        )
+    return _chunked_attention(
+        q, k, v, q_pos, kv_pos,
+        causal=causal, window=window, softcap=softcap, scale=scale,
+    )
+
+
+__all__ = ["flash_attention", "attention_reference", "NEG_INF"]

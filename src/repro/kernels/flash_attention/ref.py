@@ -1,0 +1,85 @@
+"""Pure-jnp dense oracle for flash attention.
+
+Semantics shared by ops.py (chunked jnp) and kernel.py (Pallas TPU):
+
+  q:      (B, Sq, Hq, Dh)
+  k, v:   (B, Skv, Hkv, Dh)   with Hq % Hkv == 0 (GQA)
+  q_pos:  (B, Sq)  int32 absolute positions of the query tokens
+  kv_pos: (B, Skv) int32 absolute positions of cached kv tokens; -1 = empty
+
+Mask rule (all position-driven, which uniformly covers training/causal,
+sliding-window, decode-with-rolling-buffer and cross-attention):
+
+  valid(b, i, j) =  kv_pos[b,j] >= 0
+                  & (not causal  or kv_pos[b,j] <= q_pos[b,i])
+                  & (window is None or q_pos[b,i] - kv_pos[b,j] < window)
+
+Softmax is computed in fp32 over the valid set; fully-masked rows return 0.
+Optional logit soft-capping: logits = cap * tanh(logits / cap).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_mask(
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    causal: bool,
+    window: int | None,
+) -> jax.Array:
+    """Boolean mask (B, Sq, Skv); True = attend."""
+    qp = q_pos[:, :, None].astype(jnp.int32)
+    kp = kv_pos[:, None, :].astype(jnp.int32)
+    valid = kp >= 0
+    if causal:
+        valid &= kp <= qp
+    if window is not None:
+        valid &= (qp - kp) < window
+    return valid
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    mask = attention_mask(q_pos, kv_pos, causal=causal, window=window)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    # Guard fully-masked rows: their max is NEG_INF; shift to 0 to avoid NaN.
+    m = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(logits - m)
+    p = jnp.where(mask[:, None, None, :, :], p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)

@@ -1,0 +1,119 @@
+"""Pallas TPU expert-grouped matmul (MegaBlocks-style ragged GEMM).
+
+Formulation: tokens arrive pre-sorted by expert; group boundaries are
+aligned to the row-tile size BT (the MoE dispatch layer pads each expert's
+queue to a BT multiple — capacity-style, so alignment is free).  Each row
+tile therefore belongs to exactly ONE expert, whose id is delivered via
+scalar prefetch (PrefetchScalarGridSpec): the rhs BlockSpec index_map reads
+``tile_expert[it]`` and DMAs only that expert's (BK, BN) weight tile —
+no (T, K, N) gather ever materializes.
+
+Grid = (nT, nN, nK), K innermost sequential with a VMEM f32 accumulator;
+BT = BN = BK = 128-aligned MXU tiles.  Row tiles past the last real group
+(tile_expert == E) skip the matmul and write zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(
+    eid_ref,     # (nT,) int32 scalar-prefetch: expert id per row tile
+    lhs_ref,     # (BT, BK)
+    rhs_ref,     # (1, BK, BN)
+    out_ref,     # (BT, BN)
+    acc_ref,     # (BT, BN) f32 scratch
+    *,
+    nk: int,
+    n_experts: int,
+):
+    it = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = eid_ref[it] < n_experts
+
+    @pl.when(valid)
+    def _mm():
+        acc_ref[...] += jax.lax.dot_general(
+            lhs_ref[...].astype(jnp.float32),
+            rhs_ref[0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def tile_expert_map(group_sizes: jax.Array, n_tiles: int, bt: int) -> jax.Array:
+    """Expert id owning each row tile (tiles past the total get E)."""
+    E = group_sizes.shape[0]
+    offsets = jnp.cumsum(group_sizes)                       # end offsets
+    starts = jnp.arange(n_tiles, dtype=jnp.int32) * bt      # tile start rows
+    return jnp.sum(
+        starts[:, None] >= offsets[None, :], axis=1
+    ).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_n", "block_k", "interpret")
+)
+def gmm_pallas(
+    lhs: jax.Array,          # (T, K) expert-sorted rows
+    rhs: jax.Array,          # (E, K, N)
+    group_sizes: jax.Array,  # (E,) int32, each a multiple of block_t
+    *,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    T, K = lhs.shape
+    E, _, N = rhs.shape
+    BT = min(block_t, max(T, 8))
+    BN = min(block_n, max(N, 128))
+    BK = min(block_k, max(K, 128))
+
+    padT, padK, padN = (-T) % BT, (-K) % BK, (-N) % BN
+    lhs_p = jnp.pad(lhs, ((0, padT), (0, padK)))
+    rhs_p = jnp.pad(rhs, ((0, 0), (0, padK), (0, padN)))
+    Tp, Kp, Np = T + padT, K + padK, N + padN
+    nt, nn, nk = Tp // BT, Np // BN, Kp // BK
+
+    eids = tile_expert_map(group_sizes, nt, BT)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt, nn, nk),
+        in_specs=[
+            pl.BlockSpec((BT, BK), lambda it, in_, ik, eid: (it, ik)),
+            # clamp in the index_map: invalid tiles (eid == E) DMA expert
+            # E-1's tile but skip the matmul and emit zeros in the kernel
+            pl.BlockSpec((1, BK, BN),
+                         lambda it, in_, ik, eid:
+                         (jnp.minimum(eid[it], E - 1), ik, in_)),
+        ],
+        out_specs=pl.BlockSpec((BT, BN), lambda it, in_, ik, eid: (it, in_)),
+        scratch_shapes=[pltpu.VMEM((BT, BN), jnp.float32)],
+    )
+    kernel = functools.partial(_gmm_kernel, nk=nk, n_experts=E)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tp, Np), lhs.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(eids, lhs_p, rhs_p)
+    return out[:T, :N]

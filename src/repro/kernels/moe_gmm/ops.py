@@ -1,0 +1,34 @@
+"""Grouped matmul entry point.
+
+TPU -> Pallas ragged GEMM (kernel.py); otherwise jax.lax.ragged_dot (XLA's
+native ragged contraction, exact same semantics as ref.gmm_reference).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def gmm(
+    lhs: jax.Array,
+    rhs: jax.Array,
+    group_sizes: jax.Array,
+    *,
+    backend: str = "auto",
+) -> jax.Array:
+    use_pallas = backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu"
+    )
+    if use_pallas:
+        from repro.kernels.moe_gmm.kernel import gmm_pallas
+
+        return gmm_pallas(lhs, rhs, group_sizes)
+    return jax.lax.ragged_dot(
+        lhs, rhs, group_sizes.astype(jnp.int32)
+    ).astype(lhs.dtype)
+
+
+__all__ = ["gmm"]

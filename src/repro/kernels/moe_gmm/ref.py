@@ -1,0 +1,41 @@
+"""Oracle for the expert-grouped matmul (ragged GEMM, MegaBlocks-style).
+
+Layout: tokens are pre-sorted by expert into one flat activation matrix.
+
+  lhs:         (T, K)   sorted token activations
+  rhs:         (E, K, N) per-expert weights
+  group_sizes: (E,)     int32; sum(group_sizes) <= T (tail rows are padding)
+
+out[t] = lhs[t] @ rhs[e(t)] where e(t) is the expert owning row t, i.e. the
+unique e with  offsets[e] <= t < offsets[e+1],  offsets = cumsum(group_sizes).
+Padding rows (t >= sum(group_sizes)) produce zeros.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_of_row(group_sizes: jax.Array, T: int) -> jax.Array:
+    """(T,) int32 expert id per row; rows past the total get E (out of range)."""
+    E = group_sizes.shape[0]
+    offsets = jnp.cumsum(group_sizes)  # (E,) end offset per expert
+    rows = jnp.arange(T, dtype=jnp.int32)
+    # expert id = number of offsets <= row index
+    return jnp.sum(rows[:, None] >= offsets[None, :], axis=1).astype(jnp.int32)
+
+
+def gmm_reference(
+    lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array
+) -> jax.Array:
+    T, K = lhs.shape
+    E, _, N = rhs.shape
+    eid = expert_of_row(group_sizes, T)  # (T,)
+    valid = eid < E
+    eid_c = jnp.minimum(eid, E - 1)
+    w = rhs[eid_c]  # (T, K, N) gather — oracle only; kernels never do this
+    out = jnp.einsum(
+        "tk,tkn->tn", lhs.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    out = jnp.where(valid[:, None], out, 0.0)
+    return out.astype(lhs.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.ssd.ops import ssd, ssd_chunked_jnp, ssd_decode_step  # noqa: F401

@@ -1,0 +1,169 @@
+"""Pallas TPU kernel for chunked SSD (Mamba2 state-space duality).
+
+Grid = (B, H, nc): batch and head parallel, chunk axis sequential
+("arbitrary") carrying the recurrent state in a VMEM scratch (P, N) f32.
+
+Per grid step the kernel computes, entirely in VMEM/f32 (see ops.py for the
+math derivation):
+
+  intra-chunk   scores = (C @ B^T) * decay(L) * dt    (Q,Q) MXU matmul
+                y_intra = scores @ x                   (Q,Q)x(Q,P)
+  state update  S += x^T @ (w * B)                     (P,Q)x(Q,N)
+  inter-chunk   y_inter = (C * exp(cumA)) @ S_prev^T   (Q,N)x(N,P)
+
+Q = chunk (default 256), P = head_dim (64), N = d_state (128): all matmul
+dims are MXU-aligned multiples of 64/128.  VMEM working set per step is
+(Q*P + 2*Q*N + Q*Q + P*N) * 4B ≈ 0.7 MB at Q=256.
+
+The wrapper pads S to a chunk multiple with dt = 0 (decay = 1, zero
+contribution — state passes through, outputs sliced off) and repeats
+B/C groups to heads (G is small; per-head duplication keeps the grid
+simple, and B/C blocks are tiny next to x).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,       # (1, Q, 1, P)
+    dt_ref,      # (1, Q, 1)
+    A_ref,       # (1,)  SMEM
+    B_ref,       # (1, Q, 1, N)
+    C_ref,       # (1, Q, 1, N)
+    D_ref,       # (1,)  SMEM
+    init_ref,    # (1, 1, P, N) initial state
+    y_ref,       # (1, Q, 1, P)
+    fin_ref,     # (1, 1, P, N) final state (written at last chunk)
+    state_ref,   # (P, N) f32 scratch — recurrent state across chunks
+    *,
+    nc: int,
+):
+    ic = pl.program_id(2)
+    Q, P = x_ref.shape[1], x_ref.shape[3]
+    N = B_ref.shape[3]
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    Bm = B_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    Cm = C_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    A = A_ref[0].astype(jnp.float32)                 # scalar
+    D = D_ref[0].astype(jnp.float32)
+
+    dA = dt * A                                       # (Q,) log decay
+    cumA = jnp.cumsum(dA)                             # inclusive
+    tot = cumA[-1]
+
+    # intra-chunk: L[i,j] = exp(cumA_i - cumA_j) * dt_j for j <= i
+    ci = cumA[:, None]
+    cj = cumA[None, :]
+    tril = jnp.tril(jnp.ones((Q, Q), dtype=jnp.bool_))
+    decay = jnp.where(tril, jnp.exp(ci - cj), 0.0)    # (Q, Q)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (Q, Q) = C_i . B_j
+    scores = scores * decay * dt[None, :]
+    y_intra = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (Q, P)
+
+    # inter-chunk: y_inter = (C * exp(cumA)) @ state_prev^T  -> (Q, P)
+    state_prev = state_ref[...]                        # (P, N)
+    c_scaled = Cm * jnp.exp(cumA)[:, None]
+    y_inter = jax.lax.dot_general(
+        c_scaled, state_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = y_intra + y_inter + D * x
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: S = exp(tot) * S + x^T @ (w * B), w = exp(tot - cumA)*dt
+    w = jnp.exp(tot - cumA) * dt                       # (Q,)
+    contrib = jax.lax.dot_general(
+        x, Bm * w[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (P, N)
+    state_ref[...] = jnp.exp(tot) * state_prev + contrib
+
+    @pl.when(ic == nc - 1)
+    def _fin():
+        fin_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret")
+)
+def ssd_pallas(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)
+    A: jax.Array,      # (H,)
+    Bm: jax.Array,     # (B, S, G, N)
+    Cm: jax.Array,     # (B, S, G, N)
+    D: jax.Array,      # (H,)
+    *,
+    chunk: int = 256,
+    initial_state: jax.Array | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    Bsz, S_orig, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, max(S_orig, 8))
+
+    pad = (-S_orig) % Q
+    if pad:
+        padf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, Bm, Cm = padf(x), padf(dt), padf(Bm), padf(Cm)
+    S = x.shape[1]
+    nc = S // Q
+
+    # expand groups to heads so the grid is uniform over H
+    Bh = jnp.repeat(Bm, H // G, axis=2)   # (B, S, H, N)
+    Ch = jnp.repeat(Cm, H // G, axis=2)
+
+    if initial_state is None:
+        init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, dt, A, Bh, Ch, D, init)
+    return y[:, :S_orig], fin

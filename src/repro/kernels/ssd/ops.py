@@ -1,0 +1,157 @@
+"""Chunked SSD (state-space duality) — the Mamba2 training-time algorithm.
+
+Block decomposition over chunks of length Q (Dao & Gu, arXiv:2405.21060 §6):
+
+  within-chunk (quadratic, MXU-friendly):
+      L[i,j]   = exp(cumA_i - cumA_j) * dt_j          (j <= i, else 0)
+      scores   = (C_i . B_j) * L[i,j]
+      Y_intra  = scores @ X
+  chunk state contribution:
+      S_c      = sum_j exp(cumA_Q - cumA_j) * dt_j * X_j (outer) B_j
+  inter-chunk recurrence (linear scan over n_chunks):
+      state_c  = exp(cumA_Q) * state_{c-1} + S_c
+      Y_inter[i] = exp(cumA_i) * (C_i @ state_{c-1})
+
+Dispatch: TPU -> Pallas kernel (kernel.py); else the jnp path below.
+Both share the exact semantics of ref.ssd_reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(t: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,G,N) -> (B,S,H,N) by repeating each group over its heads."""
+    G = t.shape[2]
+    return jnp.repeat(t, n_heads // G, axis=2)
+
+
+def ssd_chunked_jnp(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    D: jax.Array,
+    *,
+    chunk: int = 256,
+    initial_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)).  Sequences that are not
+    a multiple of the chunk are zero-padded at the tail: pad steps have
+    dt = 0, so decay = exp(0) = 1 and contribution = 0 — the state passes
+    through unchanged and padded outputs are sliced off."""
+    Bsz, S_orig, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S_orig)
+    if S_orig % Q != 0:
+        pad = Q - S_orig % Q
+        padf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, Bm, Cm = padf(x), padf(dt), padf(Bm), padf(Cm)
+    S = x.shape[1]
+    nc = S // Q
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bh = _expand_groups(Bm.astype(jnp.float32), H).reshape(Bsz, nc, Q, H, N)
+    Ch = _expand_groups(Cm.astype(jnp.float32), H).reshape(Bsz, nc, Q, H, N)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    dA = dtf * Af  # (B,nc,Q,H) log-decay per step
+    cumA = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk
+    totA = cumA[:, :, -1, :]  # (B,nc,H)
+
+    # ---- within-chunk quadratic term -------------------------------------
+    # L[b,c,h,i,j] = exp(cumA_i - cumA_j) * dt_j  for j <= i
+    ci = cumA[:, :, :, None, :]  # (B,nc,Q,1,H)
+    cj = cumA[:, :, None, :, :]  # (B,nc,1,Q,H)
+    li = jnp.tril(jnp.ones((Q, Q), dtype=bool))[None, None, :, :, None]
+    decay = jnp.where(li, jnp.exp(ci - cj), 0.0)  # (B,nc,Q,Q,H)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh) * decay
+    scores = scores * dtf[:, :, None, :, :]  # multiply dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xf)
+
+    # ---- chunk state contributions ---------------------------------------
+    # S_c = sum_j exp(totA - cumA_j) * dt_j * X_j (outer) B_j   (B,nc,H,P,N)
+    w = jnp.exp(totA[:, :, None, :] - cumA) * dtf  # (B,nc,Q,H)
+    s_contrib = jnp.einsum("bcjh,bcjhp,bcjhn->bchpn", w, xf, Bh)
+
+    # ---- inter-chunk linear recurrence ------------------------------------
+    if initial_state is None:
+        state0 = jnp.zeros((Bsz, H, P, N), dtype=jnp.float32)
+    else:
+        state0 = initial_state.astype(jnp.float32)
+
+    def step(state, inputs):
+        contrib, tot = inputs  # (B,H,P,N), (B,H)
+        prev = state
+        state = jnp.exp(tot)[:, :, None, None] * state + contrib
+        return state, prev
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        state0,
+        (s_contrib.swapaxes(0, 1), totA.swapaxes(0, 1)),
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (B,nc,H,P,N) state entering chunk
+
+    # ---- inter-chunk output term ------------------------------------------
+    y_inter = jnp.einsum(
+        "bcihn,bchpn->bcihp", Ch * jnp.exp(cumA)[..., None], prev_states
+    )
+
+    y = y_intra + y_inter + Df[None, None, None, :, None] * xf
+    y = y.reshape(Bsz, S, H, P)[:, :S_orig].astype(x.dtype)
+    return y, final_state
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B,H,P,N) fp32
+    x_t: jax.Array,    # (B,H,P)
+    dt_t: jax.Array,   # (B,H)
+    A: jax.Array,      # (H,)
+    B_t: jax.Array,    # (B,G,N)
+    C_t: jax.Array,    # (B,G,N)
+    D: jax.Array,      # (H,)
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token state update; O(H*P*N) per token, O(1) in context."""
+    Bsz, H, P, N = state.shape
+    G = B_t.shape[1]
+    Bh = jnp.repeat(B_t.astype(jnp.float32), H // G, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(C_t.astype(jnp.float32), H // G, axis=1)
+    xf = x_t.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32))[:, :, None, None]
+    delta = (dtf[:, :, None] * xf)[..., None] * Bh[:, :, None, :]
+    new_state = decay * state + delta
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return new_state, y.astype(x_t.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def ssd(
+    x, dt, A, Bm, Cm, D,
+    *,
+    chunk: int = 256,
+    initial_state: jax.Array | None = None,
+    backend: str = "auto",
+):
+    """Public chunked-SSD entry point (see module docstring)."""
+    use_pallas = backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu"
+    )
+    if use_pallas:
+        from repro.kernels.ssd.kernel import ssd_pallas
+
+        return ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk,
+                          initial_state=initial_state)
+    return ssd_chunked_jnp(x, dt, A, Bm, Cm, D, chunk=chunk,
+                           initial_state=initial_state)
+
+
+__all__ = ["ssd", "ssd_chunked_jnp", "ssd_decode_step"]

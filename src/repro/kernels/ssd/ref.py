@@ -1,0 +1,77 @@
+"""Sequential-scan oracle for the Mamba2 SSD (state-space duality) op.
+
+Shapes (Mamba2 conventions):
+  x:  (B, S, H, P)   inputs per head            (P = head_dim)
+  dt: (B, S, H)      positive step sizes        (softplus already applied)
+  A:  (H,)           negative decay per head    (A = -exp(A_log))
+  Bm: (B, S, G, N)   input projections          (N = d_state, G = ngroups)
+  Cm: (B, S, G, N)   output projections
+  D:  (H,)           skip connection
+
+Recurrence (per head h, group g = h % G ... heads are split evenly over
+groups, i.e. g = h // (H // G)):
+
+  state_t = exp(dt_t * A_h) * state_{t-1} + dt_t * x_t  (outer) Bm_t
+  y_t     = state_t @ Cm_t + D_h * x_t
+
+state: (P, N). All math in fp32; output cast back to x.dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _group_index(h: int, n_heads: int, ngroups: int) -> int:
+    return h // (n_heads // ngroups)
+
+
+def ssd_reference(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    D: jax.Array,
+    *,
+    initial_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    _, _, G, N = Bm.shape
+    heads_per_group = H // G
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    # expand groups to heads: (B, S, H, N)
+    Bh = jnp.repeat(Bf, heads_per_group, axis=2)
+    Ch = jnp.repeat(Cf, heads_per_group, axis=2)
+
+    if initial_state is None:
+        state0 = jnp.zeros((Bsz, H, P, N), dtype=jnp.float32)
+    else:
+        state0 = initial_state.astype(jnp.float32)
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * Af)[:, :, None, None]  # (B,H,1,1)
+        delta = (dtt[:, :, None] * xt)[..., None] * bt[:, :, None, :]
+        state = decay * state + delta  # (B,H,P,N)
+        yt = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        yt = yt + Df[None, :, None] * xt
+        return state, yt
+
+    xs = (
+        xf.swapaxes(0, 1),      # (S,B,H,P)
+        dtf.swapaxes(0, 1),     # (S,B,H)
+        Bh.swapaxes(0, 1),      # (S,B,H,N)
+        Ch.swapaxes(0, 1),
+    )
+    final_state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.swapaxes(0, 1).astype(x.dtype)  # (B,S,H,P)
+    return y, final_state

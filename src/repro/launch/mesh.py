@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+``xla_force_host_platform_device_count=512`` before first jax init, and
+smoke tests must keep seeing 1 device.
+
+Geometry (TPU v5e pods): a pod is 16×16 = 256 chips; the multi-pod mesh
+stacks 2 pods on a leading "pod" axis connected over DCN.  Axis meaning:
+
+  pod    — data parallelism across pods (DCN: gradient sync only;
+           the MoE all-to-all and TP collectives never cross it)
+  data   — in-pod data parallelism / FSDP / expert parallelism (ICI)
+  model  — tensor parallelism (ICI)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_worker_mesh(n_devices: int | None = None, *,
+                     model_parallel: int = 1):
+    """Small mesh over locally visible devices (examples / elastic workers).
+    data axis = n_devices / model_parallel."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    assert n % model_parallel == 0
+    arr = np.array(devs[:n]).reshape(n // model_parallel, model_parallel)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,8 @@
+from repro.models.config import (  # noqa: F401
+    EncoderConfig,
+    FrontendConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from repro.models import model  # noqa: F401

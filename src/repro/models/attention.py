@@ -1,0 +1,297 @@
+"""GQA attention block: projections, RoPE, QK-norm, KV caches, windows.
+
+The (q,k,v) -> o core is delegated to kernels.flash_attention.ops (Pallas on
+TPU, chunked jnp elsewhere).  Everything here is position-driven so the same
+code path covers training, prefill, rolling-window decode and cross-attention.
+
+KV cache layout per attention layer (stacked over the scan axis by the stack):
+  k:   (B, C, Hkv, Dh)    C = capacity (full seq len, or window for local layers)
+  v:   (B, C, Hkv, Dh)
+  pos: (B, C) int32       absolute position held in each slot; -1 = empty
+
+Rolling-window layers write slot = position % C; global layers slot = position.
+RoPE is applied before caching, so cached keys never need re-rotation.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_linear,
+    apply_rmsnorm,
+    apply_rope,
+    init_linear,
+    ones_param,
+)
+
+Constrain = Callable[[jax.Array, tuple[str | None, ...]], jax.Array]
+
+
+def _noop_constrain(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+    return x
+
+
+def init_attention(cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.param_dtype
+    p = {
+        "wq": init_linear(d, H * Dh, ("embed", "heads"), dt,
+                          bias=cfg.qkv_bias, bias_axis="heads"),
+        "wk": init_linear(d, Hkv * Dh, ("embed", "kv"), dt,
+                          bias=cfg.qkv_bias, bias_axis="kv"),
+        "wv": init_linear(d, Hkv * Dh, ("embed", "kv"), dt,
+                          bias=cfg.qkv_bias, bias_axis="kv"),
+        "wo": init_linear(H * Dh, d, ("heads", "embed"), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": ones_param((Dh,), (None,), dt)}
+        p["k_norm"] = {"scale": ones_param((Dh,), (None,), dt)}
+    return p
+
+
+def _project_qkv(
+    p: dict,
+    cfg: ModelConfig,
+    xq: jax.Array,
+    xkv: jax.Array,
+    *,
+    rope_on: bool,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    constrain: Constrain,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    q = apply_linear(p["wq"], xq).reshape(B, Sq, H, Dh)
+    k = apply_linear(p["wk"], xkv).reshape(B, Skv, Hkv, Dh)
+    v = apply_linear(p["wv"], xkv).reshape(B, Skv, Hkv, Dh)
+
+    if cfg.qk_norm:
+        q = apply_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = apply_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope_on:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    q = constrain(q, ("batch", "seq", "heads_act", None))
+    k = constrain(k, ("batch", "seq", "kv_act", None))
+    v = constrain(v, ("batch", "seq", "kv_act", None))
+    return q, k, v
+
+
+def _sp_attention(
+    q, k, v, q_pos, kv_pos, mesh, *, causal, window, softcap,
+):
+    """Sequence-parallel attention under shard_map (explicit collectives).
+
+    Used when the head count does not divide the TP axis (llama4: 40 heads
+    on model=16): instead of letting GSPMD replicate the attention 16×
+    (or all-gather Q per head group — both observed, both awful), shard
+    the SEQ dim over "model", all-gather only K/V (+positions) per layer,
+    and run the local flash path on the chip's query rows.  Absolute
+    positions make cross-shard causality exact with no ring schedule.
+    Differentiable: the all-gather transposes to a reduce-scatter of
+    dK/dV in the backward pass.
+    """
+    tp = mesh.shape["model"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    psize = 1
+    for a in batch_axes:
+        psize *= mesh.shape[a]
+    bax = batch_axes if (psize > 1 and q.shape[0] % psize == 0) else None
+
+    def body(q_l, k_l, v_l, qp_l, kp_l):
+        k_f = jax.lax.all_gather(k_l, "model", axis=1, tiled=True)
+        v_f = jax.lax.all_gather(v_l, "model", axis=1, tiled=True)
+        kp_f = jax.lax.all_gather(kp_l, "model", axis=1, tiled=True)
+        return flash_attention(
+            q_l, k_f, v_f, qp_l, kp_f,
+            causal=causal, window=window, softcap=softcap,
+        )
+
+    qspec = P(bax, "model", None, None)
+    pspec = P(bax, "model")
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, qspec, qspec, pspec, pspec),
+        out_specs=qspec,
+        check_vma=False,
+    )(q, k, v, q_pos, kv_pos)
+
+
+def _use_sp(cfg: ModelConfig, mesh, Sq: int, Skv: int, B: int,
+            cross: bool) -> bool:
+    if mesh is None or cross:
+        return False
+    tp = dict(mesh.shape).get("model", 1)
+    if tp <= 1 or cfg.n_heads % tp == 0:
+        return False  # plain TP head sharding works
+    return Sq > 1 and Sq % tp == 0 and Skv % tp == 0
+
+
+def attn_forward(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    rope_on: bool = True,
+    window: int | None = None,
+    causal: bool = True,
+    positions: jax.Array | None = None,
+    kv_ctx: jax.Array | None = None,
+    kv_ctx_positions: jax.Array | None = None,
+    constrain: Constrain = _noop_constrain,
+    return_kv: bool = False,
+    mesh=None,
+):
+    """Full-sequence attention (training / prefill / encoder / cross).
+    With return_kv=True returns (out, (k, v)) for cache filling — k is
+    post-RoPE, matching the decode-path cache convention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if kv_ctx is None:  # self-attention
+        xkv, kv_positions = x, positions
+    else:  # cross-attention over encoder output
+        xkv = kv_ctx
+        if kv_ctx_positions is None:
+            kv_ctx_positions = jnp.broadcast_to(
+                jnp.arange(xkv.shape[1], dtype=jnp.int32), (B, xkv.shape[1])
+            )
+        kv_positions = kv_ctx_positions
+        causal = False
+
+    q, k, v = _project_qkv(
+        p, cfg, x, xkv,
+        rope_on=rope_on and kv_ctx is None,
+        q_positions=positions, kv_positions=kv_positions,
+        constrain=constrain,
+    )
+    if _use_sp(cfg, mesh, q.shape[1], k.shape[1], q.shape[0],
+               kv_ctx is not None):
+        o = _sp_attention(
+            q, k, v, positions, kv_positions, mesh,
+            causal=causal, window=window, softcap=cfg.attn_logit_softcap,
+        )
+    else:
+        o = flash_attention(
+            q, k, v, positions, kv_positions,
+            causal=causal, window=window, softcap=cfg.attn_logit_softcap,
+        )
+    o = constrain(o, ("batch", "seq", "heads_act", None))
+    o = o.reshape(B, S, cfg.n_heads * cfg.d_head)
+    out = apply_linear(p["wo"], o)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode path
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, capacity: int, dtype
+) -> dict:
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((batch, capacity, Hkv, Dh), dtype=dtype),
+        "v": jnp.zeros((batch, capacity, Hkv, Dh), dtype=dtype),
+        "pos": jnp.full((batch, capacity), -1, dtype=jnp.int32),
+    }
+
+
+def kv_cache_spec(
+    cfg: ModelConfig, batch: int, capacity: int, dtype
+) -> dict:
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jax.ShapeDtypeStruct((batch, capacity, Hkv, Dh), dtype),
+        "v": jax.ShapeDtypeStruct((batch, capacity, Hkv, Dh), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+    }
+
+
+def cache_fill(
+    cache: dict,
+    k: jax.Array,            # (B, S, Hkv, Dh)
+    v: jax.Array,
+    positions: jax.Array,    # (B, S)
+) -> dict:
+    """Bulk-write keys/values. slot = position % capacity (exact for global
+    layers, rolling for local windows).  For rolling layers later writes
+    overwrite earlier slots, matching the window semantics.
+
+    B=1 single-token writes (long-context decode) use a masked
+    where-update instead of a scatter: with no batch dim to partition by,
+    a dynamic scatter makes GSPMD replicate the whole seq-sharded cache
+    (a 26 GB/chip blowup on the long_500k cell), while the elementwise
+    form partitions trivially.  Batched decode keeps the O(1) scatter —
+    the masked form would pay a full cache rewrite per step."""
+    C = cache["k"].shape[1]
+    slots = positions % C  # (B, S)
+    if positions.shape[1] == 1 and positions.shape[0] == 1:
+        hit = (jnp.arange(C, dtype=jnp.int32)[None, :] == slots)  # (B, C)
+        new_k = jnp.where(hit[:, :, None, None],
+                          k.astype(cache["k"].dtype), cache["k"])
+        new_v = jnp.where(hit[:, :, None, None],
+                          v.astype(cache["v"].dtype), cache["v"])
+        new_pos = jnp.where(hit, positions.astype(jnp.int32), cache["pos"])
+        return {"k": new_k, "v": new_v, "pos": new_pos}
+    bidx = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
+    new_k = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype))
+    new_v = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype))
+    new_pos = cache["pos"].at[bidx, slots].set(positions.astype(jnp.int32))
+    return {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def attn_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x_t: jax.Array,          # (B, 1, d_model)
+    cache: dict,
+    lengths: jax.Array,      # (B,) current sequence lengths (positions of x_t)
+    *,
+    rope_on: bool = True,
+    window: int | None = None,
+    cross: bool = False,
+    constrain: Constrain = _noop_constrain,
+) -> tuple[jax.Array, dict]:
+    """One decode step. For cross-attention the cache is read-only."""
+    B = x_t.shape[0]
+    q_positions = lengths[:, None].astype(jnp.int32)  # (B,1)
+
+    if cross:
+        H, Dh = cfg.n_heads, cfg.d_head
+        q = apply_linear(p["wq"], x_t).reshape(B, 1, H, Dh)
+        if cfg.qk_norm:
+            q = apply_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        o = flash_attention(
+            q, cache["k"], cache["v"], q_positions, cache["pos"],
+            causal=False, window=None, softcap=cfg.attn_logit_softcap,
+        )
+        o = o.reshape(B, 1, H * Dh)
+        return apply_linear(p["wo"], o), cache
+
+    q, k_t, v_t = _project_qkv(
+        p, cfg, x_t, x_t,
+        rope_on=rope_on,
+        q_positions=q_positions, kv_positions=q_positions,
+        constrain=constrain,
+    )
+    cache = cache_fill(cache, k_t, v_t, q_positions)
+    o = flash_attention(
+        q, cache["k"], cache["v"], q_positions, cache["pos"],
+        causal=True, window=window, softcap=cfg.attn_logit_softcap,
+    )
+    o = constrain(o, ("batch", "seq", "heads_act", None))
+    o = o.reshape(B, 1, cfg.n_heads * cfg.d_head)
+    return apply_linear(p["wo"], o), cache

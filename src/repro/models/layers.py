@@ -1,0 +1,190 @@
+"""Core layer primitives: norms, linears, embeddings, RoPE, MLPs.
+
+Every module is an (init, apply) function pair.  ``init_*`` returns a tree
+of :class:`~repro.models.param.Param`; ``apply_*`` consumes the matching
+tree of plain arrays.  Logical axis names used here:
+
+  vocab   — token embedding rows          (sharded over "model")
+  embed   — the d_model axis              (FSDP-sharded over "data" on big archs)
+  heads   — flattened q-head * head_dim   (sharded over "model")
+  kv      — flattened kv-head * head_dim  (sharded over "model")
+  mlp     — the d_ff axis                 (sharded over "model")
+  expert  — MoE expert axis               (sharded over "data": expert parallelism)
+  conv    — conv kernel taps              (replicated)
+  ssm     — SSM state / inner axes        (sharded over "model")
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param import (
+    Param,
+    dense_param,
+    embed_param,
+    ones_param,
+    zeros_param,
+)
+
+Dtype = Any
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype: Dtype) -> dict:
+    return {"scale": ones_param((d,), ("embed",), dtype)}
+
+
+def apply_rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype: Dtype) -> dict:
+    return {
+        "scale": ones_param((d,), ("embed",), dtype),
+        "bias": zeros_param((d,), ("embed",), dtype),
+    }
+
+
+def apply_layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_norm(kind: str, d: int, dtype: Dtype) -> dict:
+    return init_layernorm(d, dtype) if kind == "layernorm" else init_rmsnorm(d, dtype)
+
+
+def apply_norm(kind: str, p: dict, x: jax.Array, eps: float) -> jax.Array:
+    if kind == "layernorm":
+        return apply_layernorm(p, x, eps)
+    return apply_rmsnorm(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+def init_linear(
+    d_in: int,
+    d_out: int,
+    axes: tuple[str | None, str | None],
+    dtype: Dtype,
+    *,
+    bias: bool = False,
+    bias_axis: str | None = None,
+    scale: float = 1.0,
+) -> dict:
+    p = {"w": dense_param((d_in, d_out), axes, dtype, fan_in=d_in, scale=scale)}
+    if bias:
+        p["b"] = zeros_param((d_out,), (bias_axis,), dtype)
+    return p
+
+
+def apply_linear(p: dict, x: jax.Array) -> jax.Array:
+    y = jnp.einsum(
+        "...d,df->...f", x, p["w"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def init_embedding(vocab: int, d: int, dtype: Dtype) -> dict:
+    return {"table": embed_param((vocab, d), ("vocab", "embed"), dtype)}
+
+
+def apply_embedding(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def apply_unembed(p: dict, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ table^T (fp32 logits)."""
+    return jnp.einsum(
+        "...d,vd->...v", x, p["table"], preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """Rotate pairs (x[..., ::2], x[..., 1::2]).  x: [..., seq, heads, d_head],
+    positions: broadcastable to [..., seq]."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta), dtype=jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward blocks
+# ---------------------------------------------------------------------------
+
+def init_mlp(
+    d_model: int,
+    d_ff: int,
+    dtype: Dtype,
+    *,
+    gated: bool = True,
+    act: str = "silu",
+) -> dict:
+    p = {
+        "up": dense_param((d_model, d_ff), ("embed", "mlp"), dtype),
+        "down": dense_param((d_ff, d_model), ("mlp", "embed"), dtype, fan_in=d_ff),
+    }
+    if gated:
+        p["gate"] = dense_param((d_model, d_ff), ("embed", "mlp"), dtype)
+    del act  # activation choice lives in the config, not the param tree
+    return p
+
+
+def _activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {name}")
+
+
+def apply_mlp(p: dict, x: jax.Array, *, gated: bool = True, act: str = "silu") -> jax.Array:
+    up = jnp.einsum("...d,df->...f", x, p["up"], preferred_element_type=jnp.float32)
+    if gated:
+        gate = jnp.einsum(
+            "...d,df->...f", x, p["gate"], preferred_element_type=jnp.float32
+        )
+        h = _activation(act, gate) * up
+    else:
+        h = _activation(act, up)
+    h = h.astype(x.dtype)
+    return jnp.einsum(
+        "...f,fd->...d", h, p["down"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)

@@ -1,0 +1,248 @@
+"""Top-level model: embeddings + stacks + loss + prefill/decode entry points.
+
+Batch conventions (all inputs int32/bfloat16 as noted):
+  tokens : (B, S_text)            token ids
+  labels : (B, S_text)            next-token targets; -1 = ignore
+  frames : (B, F, d_model)        [encdec] precomputed frame embeddings (stub)
+  patches: (B, P, d_input)        [vlm]    precomputed patch embeddings (stub)
+
+For VLM archs the model sequence is [projected patches ++ token embeds] and
+the loss applies only to text positions.  For enc-dec the encoder consumes
+``frames`` and the decoder cross-attends to its output.  Non-RoPE archs
+(whisper) add sinusoidal absolute position embeddings at the input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_embedding,
+    apply_linear,
+    apply_norm,
+    apply_unembed,
+    init_embedding,
+    init_linear,
+    init_norm,
+)
+from repro.models.param import PyTree
+
+Constrain = Callable[[jax.Array, tuple[str | None, ...]], jax.Array]
+
+
+def _noop(x, axes):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_model(cfg: ModelConfig) -> PyTree:
+    cross = cfg.encoder is not None
+    p: dict[str, Any] = {
+        "embed": init_embedding(cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "stack": tfm.init_stack(cfg, cross=cross),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_linear(
+            cfg.d_model, cfg.vocab_size, ("embed", "vocab"), cfg.param_dtype
+        )
+    if cross:
+        p["encoder"] = {
+            "stack": tfm.init_stack(cfg, n_layers=cfg.encoder.n_layers),
+            "final_norm": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+        }
+    if cfg.frontend is not None:
+        p["projector"] = init_linear(
+            cfg.frontend.d_input, cfg.d_model, (None, "embed"), cfg.param_dtype
+        )
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """(B, S) int32 -> (B, S, d) float32 sinusoidal embeddings."""
+    half = d // 2
+    freqs = jnp.exp(
+        -np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _maybe_abs_pos(cfg: ModelConfig, x: jax.Array,
+                   positions: jax.Array) -> jax.Array:
+    if cfg.rope:
+        return x
+    return (x.astype(jnp.float32) + sinusoidal(positions, cfg.d_model)).astype(
+        x.dtype
+    )
+
+
+def _unembed(params: PyTree, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return apply_unembed(params["embed"], x)
+    return jnp.einsum(
+        "...d,dv->...v", x, params["unembed"]["w"],
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _encode(params: PyTree, cfg: ModelConfig, frames: jax.Array, *,
+            mesh=None, constrain: Constrain = _noop,
+            remat: str = "full", unroll: bool = False) -> jax.Array:
+    B, F, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+    x = (frames.astype(jnp.float32) + sinusoidal(pos, cfg.d_model)).astype(
+        jnp.dtype(cfg.activation_dtype)
+    )
+    x, _ = tfm.stack_forward(
+        params["encoder"]["stack"], cfg, x,
+        positions=pos, causal=False, mesh=mesh, constrain=constrain,
+        remat=remat, unroll=unroll,
+    )
+    return apply_norm(cfg.norm, params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _input_embeds(params: PyTree, cfg: ModelConfig, batch: dict,
+                  constrain: Constrain) -> tuple[jax.Array, jax.Array]:
+    """Returns (x (B,S,d), positions (B,S)). Prepends projected patches for
+    VLM archs."""
+    tokens = batch["tokens"]
+    B, St = tokens.shape
+    x = apply_embedding(params["embed"], tokens)
+    if cfg.frontend is not None:
+        patches = batch["patches"].astype(x.dtype)
+        pre = apply_linear(params["projector"], patches)
+        x = jnp.concatenate([pre, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _maybe_abs_pos(cfg, x, positions)
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x.astype(jnp.dtype(cfg.activation_dtype)), positions
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params: PyTree, cfg: ModelConfig, batch: dict, *,
+            mesh=None, constrain: Constrain = _noop, remat: str = "full",
+            unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, vocab) fp32, moe_aux)."""
+    cross = cfg.encoder is not None
+    enc_out = None
+    if cross:
+        enc_out = _encode(params, cfg, batch["frames"], mesh=mesh,
+                          constrain=constrain, remat=remat, unroll=unroll)
+    x, positions = _input_embeds(params, cfg, batch, constrain)
+    x, aux = tfm.stack_forward(
+        params["stack"], cfg, x,
+        positions=positions, causal=True, cross=cross, enc_out=enc_out,
+        mesh=mesh, constrain=constrain, remat=remat, unroll=unroll,
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    if cfg.frontend is not None:  # only text positions produce logits
+        x = x[:, cfg.frontend.n_prefix:, :]
+    logits = _unembed(params, cfg, x)
+    return logits, aux
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: dict, *,
+            mesh=None, constrain: Constrain = _noop, remat: str = "full",
+            z_loss: float = 1e-4, unroll: bool = False
+            ) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, cfg, batch, mesh=mesh, constrain=constrain,
+                          remat=remat, unroll=unroll)
+    # keep the fp32 logits vocab-sharded through the CE math: without this
+    # GSPMD gathers (B_loc, S, V) f32 per chip — 3 GB × several ops for a
+    # 200k vocab (logsumexp/scatter partition fine over a sharded V)
+    logits = constrain(logits, ("batch_logits", "seq", "vocab_act"))
+    labels = batch["labels"]
+    valid = (labels >= 0)
+    labels_c = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * valid
+    n = jnp.maximum(jnp.sum(valid), 1)
+    ce_mean = jnp.sum(ce) / n
+    zl = z_loss * jnp.sum(jnp.square(logz) * valid) / n
+    aux_w = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+    total = ce_mean + zl + aux_w * aux
+    metrics = {
+        "loss": total,
+        "ce": ce_mean,
+        "z_loss": zl,
+        "moe_aux": aux,
+        "tokens": n.astype(jnp.float32),
+    }
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               abstract: bool = False) -> PyTree:
+    dtype = jnp.dtype(cfg.activation_dtype)
+    n_enc = cfg.encoder.n_frames if cfg.encoder is not None else 0
+    return tfm.init_stack_cache(
+        cfg, batch, seq_len, dtype,
+        cross=cfg.encoder is not None, n_enc=n_enc, abstract=abstract,
+    )
+
+
+def prefill(params: PyTree, cfg: ModelConfig, batch: dict, cache: PyTree, *,
+            mesh=None, constrain: Constrain = _noop, unroll: bool = False
+            ) -> tuple[jax.Array, PyTree, jax.Array]:
+    """Processes the prompt, fills the cache.  Returns (last_logits (B, V),
+    new_cache, lengths (B,))."""
+    cross = cfg.encoder is not None
+    enc_out = None
+    if cross:
+        enc_out = _encode(params, cfg, batch["frames"], mesh=mesh,
+                          constrain=constrain, remat="none", unroll=unroll)
+    x, positions = _input_embeds(params, cfg, batch, constrain)
+    x, new_cache = tfm.stack_prefill(
+        params["stack"], cfg, x, cache,
+        positions=positions, cross=cross, enc_out=enc_out,
+        mesh=mesh, constrain=constrain, unroll=unroll,
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1, :]
+    logits = _unembed(params, cfg, last)
+    lengths = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    return logits, new_cache, lengths
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, tokens_t: jax.Array,
+                cache: PyTree, lengths: jax.Array, *,
+                mesh=None, constrain: Constrain = _noop,
+                unroll: bool = False
+                ) -> tuple[jax.Array, PyTree, jax.Array]:
+    """One token per sequence.  tokens_t: (B, 1).  Returns (logits (B, V),
+    new_cache, new_lengths)."""
+    x = apply_embedding(params["embed"], tokens_t)
+    x = _maybe_abs_pos(cfg, x, lengths[:, None])
+    x = x.astype(jnp.dtype(cfg.activation_dtype))
+    x, new_cache = tfm.stack_decode(
+        params["stack"], cfg, x, cache, lengths,
+        cross=cfg.encoder is not None, mesh=mesh, constrain=constrain,
+        unroll=unroll,
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, 0, :])
+    return logits, new_cache, lengths + 1

@@ -1,0 +1,276 @@
+"""Mixture-of-Experts block: top-k router + two dispatch implementations.
+
+``dense``   — GShard-style capacity dispatch with one-hot einsums.  O(T·E·C)
+              dispatch FLOPs: only used for small configs (smoke tests,
+              reference semantics for the EP path).
+``ep``      — production expert-parallel path under shard_map:
+                local top-k -> sort by destination device -> all_to_all
+                -> local sort by expert -> batched expert GEMM (capacity
+                padded) -> reverse all_to_all -> weighted combine.
+              Experts are sharded over the "data" mesh axis (contiguous
+              blocks of E/|data| per device), expert FF dim over "model",
+              and the whole block is replicated over "pod" (all-to-all never
+              crosses the pod boundary — DCN is too slow for per-layer a2a;
+              pods sync through the gradient all-reduce instead).
+
+Both paths drop tokens that overflow capacity (standard Switch behaviour)
+and add a Switch-style load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import dense_param, init_mlp, apply_mlp
+
+Constrain = Callable[[jax.Array, tuple[str | None, ...]], jax.Array]
+
+
+def init_moe(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, dt = cfg.d_model, cfg.param_dtype
+    f = m.d_ff_expert
+    p = {
+        "router": dense_param((d, m.n_experts), ("embed", None), "float32"),
+        "gate": dense_param((m.n_experts, d, f), ("expert", "embed", "mlp"), dt,
+                            fan_in=d),
+        "up": dense_param((m.n_experts, d, f), ("expert", "embed", "mlp"), dt,
+                          fan_in=d),
+        "down": dense_param((m.n_experts, f, d), ("expert", "mlp", "embed"), dt,
+                            fan_in=f),
+    }
+    if m.n_shared_experts > 0:
+        p["shared"] = init_mlp(d, f * m.n_shared_experts, dt,
+                               gated=cfg.gated_mlp, act=cfg.act)
+    return p
+
+
+def _router_topk(
+    logits: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """fp32 softmax router. Returns (probs (T,E), gates (T,k), idx (T,k))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return probs, gates, idx.astype(jnp.int32)
+
+
+def _aux_loss(probs: jax.Array, idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch load-balance loss: E * sum_e f_e * P_e (local estimate)."""
+    T = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(T * idx.shape[1], 1)
+    pmean = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(f * pmean)
+
+
+# ---------------------------------------------------------------------------
+# Dense (capacity-einsum) dispatch — reference / small configs
+# ---------------------------------------------------------------------------
+
+def moe_forward_dense(p: dict, cfg: ModelConfig, x: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs, gates, idx = _router_topk(logits, m.top_k)
+    aux = _aux_loss(probs, idx, m.n_experts)
+
+    C = max(1, math.ceil(T * m.top_k * m.capacity_factor / m.n_experts))
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.int32)  # (T,k,E)
+    flat = onehot.reshape(T * m.top_k, m.n_experts)
+    pos = jnp.cumsum(flat, axis=0) * flat - 1  # rank within expert, -1 if unused
+    pos = pos.reshape(T, m.top_k, m.n_experts)
+    within = (pos >= 0) & (pos < C)
+    disp = jax.nn.one_hot(pos.clip(0, C - 1), C, dtype=x.dtype) * within[
+        ..., None
+    ].astype(x.dtype)  # (T,k,E,C)
+    comb = disp * gates.astype(x.dtype)[:, :, None, None]
+    disp = jnp.sum(disp, axis=1)  # (T,E,C)
+    comb = jnp.sum(comb, axis=1)
+
+    ex_in = jnp.einsum("tec,td->ecd", disp, xt)  # (E,C,d)
+    h = jnp.einsum("ecd,edf->ecf", ex_in, p["gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", ex_in, p["up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(h) * u).astype(x.dtype)
+    ex_out = jnp.einsum("ecf,efd->ecd", h, p["down"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    y = jnp.einsum("tec,ecd->td", comb, ex_out)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xt, gated=cfg.gated_mlp, act=cfg.act)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel (all-to-all) dispatch — production path
+# ---------------------------------------------------------------------------
+
+def _sort_dispatch(values, key, n_buckets, capacity):
+    """Stable-sort `values` rows into (n_buckets, capacity) with overflow drop.
+
+    Returns (buffer, bucket_sorted, rank_sorted, order, kept_sorted) where
+    `order` is the stable sort permutation and buffer[bucket, rank] =
+    values[order][i] for kept entries."""
+    A = key.shape[0]
+    order = jnp.argsort(key, stable=True)
+    key_s = key[order]
+    counts = jnp.zeros((n_buckets,), jnp.int32).at[key_s].add(
+        1, mode="drop"
+    )
+    starts = jnp.cumsum(counts) - counts  # exclusive
+    rank = jnp.arange(A, dtype=jnp.int32) - starts[
+        jnp.clip(key_s, 0, n_buckets - 1)
+    ]
+    kept = (rank >= 0) & (rank < capacity) & (key_s >= 0) & (key_s < n_buckets)
+    b_idx = jnp.where(kept, key_s, 0)
+    r_idx = jnp.where(kept, rank, 0)
+    buf = jnp.zeros((n_buckets, capacity) + values.shape[1:], values.dtype)
+    vals_s = values[order] * kept.reshape((-1,) + (1,) * (values.ndim - 1)).astype(
+        values.dtype
+    )
+    buf = buf.at[b_idx, r_idx].add(vals_s)  # add: duplicate (0,0) slots masked to 0
+    return buf, key_s, rank, order, kept
+
+
+def _ep_local(xt, router_w, w_gate, w_up, w_down, *, m: MoEConfig,
+              data_axis: str, model_axis: str, batch_axes: tuple[str, ...],
+              dsz: int, cf: float):
+    """Per-device body under shard_map. xt: (T_loc, d) local tokens.
+    w_*: (E_loc, d, f_loc) local expert shards."""
+    T_loc, d = xt.shape
+    E = m.n_experts
+    E_loc = E // dsz
+    k = m.top_k
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router_w)
+    probs, gates, idx = _router_topk(logits, k)
+    aux = _aux_loss(probs, idx, E)
+    aux = jax.lax.pmean(aux, batch_axes)
+
+    A = T_loc * k
+    expert_id = idx.reshape(A)                      # (A,)
+    gate_val = gates.reshape(A)
+    tok_row = jnp.repeat(jnp.arange(T_loc, dtype=jnp.int32), k)
+    dst = expert_id // E_loc                        # destination device
+    e_local = expert_id % E_loc
+
+    C_send = max(1, math.ceil(A * cf / dsz))
+    send_x, dst_s, rank_s, order, kept = _sort_dispatch(
+        xt[tok_row], dst, dsz, C_send
+    )
+    meta = jnp.where(kept, e_local[order], -1)
+    send_meta = jnp.full((dsz, C_send), -1, jnp.int32).at[
+        jnp.where(kept, dst_s, 0), jnp.where(kept, rank_s, 0)
+    ].max(jnp.where(kept, meta, -1))
+
+    recv_x = jax.lax.all_to_all(send_x, data_axis, 0, 0, tiled=False)
+    recv_meta = jax.lax.all_to_all(send_meta, data_axis, 0, 0, tiled=False)
+
+    n_recv = dsz * C_send
+    rx = recv_x.reshape(n_recv, d)
+    rm = recv_meta.reshape(n_recv)
+    cap_e = max(1, math.ceil(n_recv * cf / max(E_loc, 1)))
+    grouped, e_s, rank2, order2, kept2 = _sort_dispatch(
+        rx, jnp.where(rm < 0, E_loc, rm), E_loc, cap_e
+    )
+
+    h = jnp.einsum("ecd,edf->ecf", grouped, w_gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", grouped, w_up,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(h) * u).astype(xt.dtype)
+    y_g = jnp.einsum("ecf,efd->ecd", h, w_down,
+                     preferred_element_type=jnp.float32)
+    # TP-combine the down-projection partials in bf16: halves the wire
+    # bytes of the largest per-layer collective (standard TP practice;
+    # the f32 accumulation already happened inside the einsum)
+    y_g = jax.lax.psum(y_g.astype(xt.dtype), model_axis)
+
+    # scatter expert outputs back to recv order, then reverse the a2a
+    ry = jnp.zeros((n_recv, d), xt.dtype)
+    src_rows = jnp.where(kept2, order2, n_recv)  # drop overflow
+    ry = ry.at[src_rows].add(
+        y_g[jnp.where(kept2, e_s, 0), jnp.where(kept2, rank2, 0)]
+        * kept2[:, None].astype(xt.dtype),
+        mode="drop",
+    )
+    back = jax.lax.all_to_all(
+        ry.reshape(dsz, C_send, d), data_axis, 0, 0, tiled=False
+    )
+
+    # combine at the sender: assignment a (in sorted order) lives at
+    # back[dst_s[a], rank_s[a]] if kept.
+    y_a = back[jnp.where(kept, dst_s, 0), jnp.where(kept, rank_s, 0)]
+    y_a = y_a * kept[:, None].astype(xt.dtype)
+    y_a = y_a * gate_val[order][:, None].astype(xt.dtype)
+    y = jnp.zeros((T_loc, d), xt.dtype).at[tok_row[order]].add(y_a)
+    return y, aux
+
+
+def moe_forward_ep(p: dict, cfg: ModelConfig, x: jax.Array, mesh,
+                   *, data_axis: str = "data", model_axis: str = "model"
+                   ) -> tuple[jax.Array, jax.Array]:
+    """shard_map EP dispatch. x: (B, S, d) with batch sharded over
+    (pod?, data). Router weights replicated; experts sharded over data."""
+    m = cfg.moe
+    B, S, d = x.shape
+    dsz = mesh.shape[data_axis]
+    has_pod = "pod" in mesh.shape
+    batch_axes = (("pod", data_axis) if has_pod else (data_axis,))
+    bspec = P(batch_axes, None, None)
+
+    def body(xb, router_w, w_gate, w_up, w_down):
+        T_loc = xb.shape[0] * xb.shape[1]
+        xt = xb.reshape(T_loc, d)
+        y, aux = _ep_local(
+            xt, router_w, w_gate, w_up, w_down,
+            m=m, data_axis=data_axis, model_axis=model_axis,
+            batch_axes=batch_axes, dsz=dsz, cf=m.capacity_factor,
+        )
+        return y.reshape(xb.shape), aux
+
+    wspec = P(data_axis, None, model_axis)
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(bspec, P(None, None), wspec, wspec,
+                  P(data_axis, model_axis, None)),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )(x, p["router"], p["gate"], p["up"], p["down"])
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, gated=cfg.gated_mlp, act=cfg.act)
+    return y, aux
+
+
+def moe_forward(p: dict, cfg: ModelConfig, x: jax.Array, mesh=None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Dispatch-implementation selector: EP when a mesh with a data axis of
+    size >1 is in scope, experts divide it, and the batch rows divide the
+    DP shard count (shard_map needs exact divisibility — a B=1 long-context
+    decode step routes its single token through the dense path instead)."""
+    if mesh is not None and "data" in mesh.shape and mesh.shape["data"] > 1:
+        batch_axes = [a for a in ("pod", "data") if a in mesh.shape]
+        psize = 1
+        for a in batch_axes:
+            psize *= mesh.shape[a]
+        if (
+            cfg.moe.n_experts % mesh.shape["data"] == 0
+            and x.shape[0] % psize == 0
+            and cfg.moe.d_ff_expert % mesh.shape["model"] == 0
+        ):
+            return moe_forward_ep(p, cfg, x, mesh)
+    return moe_forward_dense(p, cfg, x)

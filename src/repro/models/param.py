@@ -1,0 +1,181 @@
+"""Parameter container with logical-axis annotations.
+
+Params are plain nested dicts whose leaves are ``Param`` objects during
+construction.  ``unzip`` splits a Param tree into (values, logical_axes) so
+the training/serving code works on plain arrays while the sharding layer
+derives PartitionSpecs from the axes tree.  ``Param`` is deliberately *not*
+a pytree node: it is treated as a leaf and unzipped exactly once.
+
+Initializers are lazy (callables), so the same builder runs in three modes:
+  * real init      — materialize arrays (smoke tests, examples)
+  * abstract init  — ShapeDtypeStruct only (dry-run; no allocation)
+  * spec-only      — just the logical axes (sharding rules)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Param:
+    """A single weight: shape/dtype + logical axis names + lazy initializer."""
+
+    shape: tuple[int, ...]
+    dtype: Any
+    axes: tuple[str | None, ...]
+    init: Callable[[jax.Array], jax.Array]  # rng -> array
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"Param rank mismatch: shape {self.shape} vs axes {self.axes}"
+            )
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def _tree_map_params(fn: Callable[[Param], Any], tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_param)
+
+
+def axes_tree(tree: PyTree) -> PyTree:
+    """Extract the logical-axes tree (tuples of axis names) from a Param tree."""
+    return _tree_map_params(lambda p: p.axes, tree)
+
+
+def abstract_values(tree: PyTree) -> PyTree:
+    """ShapeDtypeStruct tree — used by the dry-run (never allocates)."""
+    return _tree_map_params(lambda p: p.abstract(), tree)
+
+
+def materialize(tree: PyTree, rng: jax.Array) -> PyTree:
+    """Materialize all params with independent fold_in'd keys (real init)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_param)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [p.init(k).astype(p.dtype) for p, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def param_count(tree: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_param)
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+def param_bytes(tree: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_param)
+    return sum(
+        int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize for p in leaves
+    )
+
+
+# ---------------------------------------------------------------------------
+# Standard initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(stddev: float) -> Callable[[jax.Array], jax.Array]:
+    def init(key, *, _s=stddev):
+        return _s * jax.random.normal(key, (), dtype=jnp.float32)
+
+    return init
+
+
+def dense_param(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    dtype: Any,
+    *,
+    fan_in: int | None = None,
+    scale: float = 1.0,
+) -> Param:
+    """Truncated-normal matmul weight with 1/sqrt(fan_in) scaling."""
+    if fan_in is None:
+        fan_in = shape[0]
+    stddev = scale / math.sqrt(max(fan_in, 1))
+
+    def init(key, *, shape=shape, stddev=stddev):
+        return stddev * jax.random.truncated_normal(
+            key, -2.0, 2.0, shape, dtype=jnp.float32
+        )
+
+    return Param(shape, dtype, axes, init)
+
+
+def embed_param(
+    shape: tuple[int, ...], axes: tuple[str | None, ...], dtype: Any
+) -> Param:
+    def init(key, *, shape=shape):
+        return jax.random.normal(key, shape, dtype=jnp.float32)
+
+    return Param(shape, dtype, axes, init)
+
+
+def zeros_param(
+    shape: tuple[int, ...], axes: tuple[str | None, ...], dtype: Any
+) -> Param:
+    return Param(shape, dtype, axes, lambda key, *, shape=shape: jnp.zeros(shape))
+
+
+def ones_param(
+    shape: tuple[int, ...], axes: tuple[str | None, ...], dtype: Any
+) -> Param:
+    return Param(shape, dtype, axes, lambda key, *, shape=shape: jnp.ones(shape))
+
+
+def const_param(
+    value: np.ndarray, axes: tuple[str | None, ...], dtype: Any
+) -> Param:
+    arr = np.asarray(value)
+    return Param(
+        tuple(arr.shape), dtype, axes, lambda key, *, arr=arr: jnp.asarray(arr)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer stacking (for lax.scan over depth)
+# ---------------------------------------------------------------------------
+
+def stack_params(trees: list[PyTree]) -> PyTree:
+    """Stack structurally identical Param trees along a new leading axis.
+
+    The leading axis is the scan (layer) axis and is never sharded, so its
+    logical axis name is ``"layers"`` (mapped to None by the sharding rules).
+    """
+    if not trees:
+        raise ValueError("cannot stack zero layers")
+    flat = [jax.tree_util.tree_flatten(t, is_leaf=is_param) for t in trees]
+    treedef = flat[0][1]
+    for _, td in flat[1:]:
+        if td != treedef:
+            raise ValueError("stack_params: mismatched layer structures")
+    stacked = []
+    for leaves in zip(*[f[0] for f in flat]):
+        p0 = leaves[0]
+        n = len(leaves)
+        for p in leaves[1:]:
+            if p.shape != p0.shape or p.axes != p0.axes:
+                raise ValueError(
+                    f"stack_params: leaf mismatch {p.shape}/{p.axes} vs"
+                    f" {p0.shape}/{p0.axes}"
+                )
+
+        def init(key, *, ps=leaves):
+            keys = jax.random.split(key, len(ps))
+            return jnp.stack([p.init(k) for p, k in zip(ps, keys)])
+
+        stacked.append(
+            Param((n, *p0.shape), p0.dtype, ("layers", *p0.axes), init)
+        )
+    return jax.tree_util.tree_unflatten(treedef, stacked)

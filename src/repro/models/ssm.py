@@ -1,0 +1,190 @@
+"""Mamba2 (SSD) block: fused input projection, causal depthwise conv,
+selective state-space scan, gated RMS norm, output projection.
+
+Used standalone (mamba2-1.3b) and inside the jamba hybrid interleave.  The
+scan core is kernels.ssd (Pallas on TPU, chunked jnp elsewhere).
+
+Decode state per layer:
+  conv:  (B, d_conv-1, conv_ch)   rolling conv window (conv_ch = di + 2*G*N)
+  ssm:   (B, H, P, N) fp32        recurrent state
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ops import ssd, ssd_decode_step
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_linear, init_linear
+from repro.models.param import Param, dense_param, ones_param, zeros_param
+
+Constrain = Callable[[jax.Array, tuple[str | None, ...]], jax.Array]
+
+
+def _noop(x, axes):
+    return x
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    conv_ch = di + 2 * s.ngroups * s.d_state
+    return s, di, H, conv_ch
+
+
+def init_ssm(cfg: ModelConfig) -> dict:
+    s, di, H, conv_ch = _dims(cfg)
+    d, dt = cfg.d_model, cfg.param_dtype
+    proj_out = 2 * di + 2 * s.ngroups * s.d_state + H  # [z, xBC, dt]
+
+    def a_log_init(key):
+        # A in [1, 16) as in the Mamba2 reference init
+        return jnp.log(
+            jax.random.uniform(key, (H,), jnp.float32, 1.0, 16.0)
+        )
+
+    def dt_bias_init(key):
+        # dt ~ LogUniform(1e-3, 1e-1) through softplus
+        u = jax.random.uniform(key, (H,), jnp.float32)
+        dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        return dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+
+    return {
+        "in_proj": init_linear(d, proj_out, ("embed", "ssm"), dt),
+        "conv_w": dense_param((s.d_conv, conv_ch), ("conv", "ssm"), dt,
+                              fan_in=s.d_conv),
+        "conv_b": zeros_param((conv_ch,), ("ssm",), dt),
+        "A_log": Param((H,), "float32", (None,), a_log_init),
+        "D": ones_param((H,), (None,), "float32"),
+        "dt_bias": Param((H,), "float32", (None,), dt_bias_init),
+        "norm_scale": ones_param((di,), ("ssm",), dt),
+        "out_proj": init_linear(di, d, ("ssm", "embed"), dt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    s, di, H, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * gn], axis=-1)
+    return z, xbc, dt  # dt: (..., H)
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    s, di, H, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    x, B, C = jnp.split(xbc, [di, di + gn], axis=-1)
+    lead = x.shape[:-1]
+    x = x.reshape(*lead, H, s.head_dim)
+    B = B.reshape(*lead, s.ngroups, s.d_state)
+    C = C.reshape(*lead, s.ngroups, s.d_state)
+    return x, B, C
+
+
+def _gated_norm(p: dict, y: jax.Array, z: jax.Array, eps: float) -> jax.Array:
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    out = yf * jax.lax.rsqrt(var + eps) * p["norm_scale"].astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with taps (K, C)."""
+    K = w.shape[0]
+    out = jax.lax.conv_general_dilated(
+        xbc,
+        w[:, None, :].astype(xbc.dtype),  # (K, 1, C) HIO
+        window_strides=(1,),
+        padding=[(K - 1, 0)],
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=xbc.shape[-1],
+    )
+    return out + b.astype(out.dtype)
+
+
+def ssm_forward(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    constrain: Constrain = _noop,
+    initial_state: jax.Array | None = None,
+    return_state: bool = False,
+):
+    """Full-sequence Mamba2 block. x: (B, S, d_model)."""
+    s, di, H, _ = _dims(cfg)
+    proj = apply_linear(p["in_proj"], x)
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs, B, C = _split_xbc(cfg, xbc)
+    xs = constrain(xs, ("batch", "seq", "ssm_heads", None))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd(xs, dt, A, B, C, p["D"], chunk=s.chunk,
+                   initial_state=initial_state)
+    y = constrain(y, ("batch", "seq", "ssm_heads", None))
+    y = y.reshape(*y.shape[:-2], di)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = apply_linear(p["out_proj"], y)
+    if return_state:
+        # decode-ready state: SSD recurrent state + the raw conv window tail
+        conv_tail = xbc_raw[:, -(s.d_conv - 1):, :]
+        return out, {"ssm": state, "conv": conv_tail}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s, di, H, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype=dtype),
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_state_spec(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s, di, H, conv_ch = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, H, s.head_dim, s.d_state),
+                                    jnp.float32),
+    }
+
+
+def ssm_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x_t: jax.Array,      # (B, 1, d_model)
+    state: dict,
+    *,
+    constrain: Constrain = _noop,
+) -> tuple[jax.Array, dict]:
+    s, di, H, conv_ch = _dims(cfg)
+    B = x_t.shape[0]
+    proj = apply_linear(p["in_proj"], x_t[:, 0])  # (B, proj_out)
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # rolling conv
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32),
+        p["conv_w"].astype(jnp.float32)
+    ) + p["conv_b"].astype(jnp.float32)
+    xbc_t = jax.nn.silu(conv_out).astype(x_t.dtype)
+    new_conv = window[:, 1:, :]
+
+    xs, Bm, Cm = _split_xbc(cfg, xbc_t)  # (B,H,P), (B,G,N), (B,G,N)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    new_ssm, y = ssd_decode_step(state["ssm"], xs, dtf, A, Bm, Cm, p["D"])
+    y = y.reshape(B, di)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = apply_linear(p["out_proj"], y)[:, None, :]  # (B,1,d)
+    return out, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,411 @@
+"""Layer-stack composition: pre-norm blocks scanned over depth.
+
+The stack is organized around the config's layer *period* p: layer i's
+(mixer, ffn, window, rope) kinds depend only on ``slot = i % p``, so the
+parameters are stored as ``{"slot0": stacked, ..., "slot{p-1}": stacked}``
+with each leaf stacked over ``n_scan = n_layers // p``.  One ``lax.scan``
+over n_scan applies p sublayers per step — HLO size is O(p), independent of
+depth (critical for the 48–64 layer archs on the 512-device dry-run).
+
+Decode threads per-layer caches through the same scan (xs = (params, cache),
+ys = new cache).  Cache *structure* is slot-static: attention slots carry
+{k, v, pos}, SSM slots carry {conv, ssm}, cross-attention adds {xk, xv, xpos}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.param import stack_params
+
+Constrain = Callable[[jax.Array, tuple[str | None, ...]], jax.Array]
+
+
+def _noop(x, axes):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Static per-slot layer description
+# ---------------------------------------------------------------------------
+
+class SlotSpec:
+    """Static (trace-time) description of sublayer slot `s` of the period."""
+
+    def __init__(self, cfg: ModelConfig, slot: int, *, cross: bool = False):
+        self.slot = slot
+        self.mixer = cfg.mixer_kind(slot)
+        self.ffn = cfg.ffn_kind(slot)
+        self.cross = cross
+        self.rope_on = cfg.layer_uses_rope(slot)
+        if self.mixer == "attn":
+            if cfg.attn_window is not None and not cfg.layer_uses_global_attn(slot):
+                self.window = cfg.attn_window
+            else:
+                self.window = None
+        else:
+            self.window = None
+
+    def cache_capacity(self, cfg: ModelConfig, seq_len: int) -> int:
+        if self.window is not None:
+            return min(self.window, seq_len)
+        return seq_len
+
+
+def slot_specs(cfg: ModelConfig, *, cross: bool = False) -> list[SlotSpec]:
+    return [SlotSpec(cfg, s, cross=cross) for s in range(cfg.period)]
+
+
+# ---------------------------------------------------------------------------
+# Single block init/apply
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, spec: SlotSpec) -> dict:
+    d, dt = cfg.d_model, cfg.param_dtype
+    p: dict[str, Any] = {"norm1": init_norm(cfg.norm, d, dt)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.init_attention(cfg)
+    else:
+        p["mixer"] = ssm_mod.init_ssm(cfg)
+    if spec.cross:
+        p["norm_ca"] = init_norm(cfg.norm, d, dt)
+        p["cross"] = attn.init_attention(cfg, cross=True)
+    if spec.ffn == "dense":
+        p["norm2"] = init_norm(cfg.norm, d, dt)
+        p["ffn"] = init_mlp(d, cfg.d_ff, dt, gated=cfg.gated_mlp, act=cfg.act)
+    elif spec.ffn == "moe":
+        p["norm2"] = init_norm(cfg.norm, d, dt)
+        p["ffn"] = moe_mod.init_moe(cfg)
+    return p
+
+
+def apply_block(
+    p: dict,
+    cfg: ModelConfig,
+    spec: SlotSpec,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    causal: bool,
+    mesh=None,
+    enc_out: jax.Array | None = None,
+    constrain: Constrain = _noop,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence block. Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm, p["norm1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        mix = attn.attn_forward(
+            p["mixer"], cfg, h,
+            rope_on=spec.rope_on, window=spec.window, causal=causal,
+            positions=positions, constrain=constrain, mesh=mesh,
+        )
+    else:
+        mix = ssm_mod.ssm_forward(p["mixer"], cfg, h, constrain=constrain)
+    x = x + mix
+    if spec.cross:
+        assert enc_out is not None
+        h = apply_norm(cfg.norm, p["norm_ca"], x, cfg.norm_eps)
+        x = x + attn.attn_forward(
+            p["cross"], cfg, h, kv_ctx=enc_out, constrain=constrain,
+        )
+    if spec.ffn == "dense":
+        h = apply_norm(cfg.norm, p["norm2"], x, cfg.norm_eps)
+        x = x + apply_mlp(p["ffn"], h, gated=cfg.gated_mlp, act=cfg.act)
+    elif spec.ffn == "moe":
+        h = apply_norm(cfg.norm, p["norm2"], x, cfg.norm_eps)
+        y, aux_l = moe_mod.moe_forward(p["ffn"], cfg, h, mesh=mesh)
+        x = x + y
+        aux = aux + aux_l
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack init
+# ---------------------------------------------------------------------------
+
+def init_stack(cfg: ModelConfig, *, n_layers: int | None = None,
+               cross: bool = False) -> dict:
+    """Stacked params: {"slotS": leaf(n_scan, ...)}."""
+    n_layers = cfg.n_layers if n_layers is None else n_layers
+    p_period = cfg.period
+    if n_layers % p_period != 0:
+        raise ValueError((n_layers, p_period))
+    n_scan = n_layers // p_period
+    specs = slot_specs(cfg, cross=cross)
+    out = {}
+    for spec in specs:
+        out[f"slot{spec.slot}"] = stack_params(
+            [init_block(cfg, spec) for _ in range(n_scan)]
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stack forward (training / prefill-as-forward / encoder)
+# ---------------------------------------------------------------------------
+
+def stack_forward(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array | None = None,
+    causal: bool = True,
+    cross: bool = False,
+    enc_out: jax.Array | None = None,
+    mesh=None,
+    constrain: Constrain = _noop,
+    remat: str = "full",
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (x, total_moe_aux).  ``unroll=True`` unrolls the depth scan
+    (used by the dry-run cost analysis: XLA counts a while body once, so
+    scanned stacks under-report FLOPs by n_scan; see launch/dryrun.py)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    specs = slot_specs(cfg, cross=cross)
+
+    def step(x, slices):
+        aux = jnp.zeros((), jnp.float32)
+        for spec in specs:
+            bp = slices[f"slot{spec.slot}"]
+            x, aux_l = apply_block(
+                bp, cfg, spec, x,
+                positions=positions, causal=causal, mesh=mesh,
+                enc_out=enc_out, constrain=constrain,
+            )
+            aux = aux + aux_l
+        return x, aux
+
+    if remat == "full":
+        step = jax.checkpoint(step)
+    elif remat == "dots":
+        step = jax.checkpoint(
+            step,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    elif remat != "none":
+        raise ValueError(f"unknown remat policy {remat}")
+
+    def body(carry, xs):
+        x, aux = carry
+        x, aux_l = step(x, xs)
+        return (x, aux + aux_l), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params, unroll=unroll
+    )
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode: caches threaded through the scan
+# ---------------------------------------------------------------------------
+
+def init_stack_cache(
+    cfg: ModelConfig, batch: int, seq_len: int, dtype,
+    *, cross: bool = False, n_enc: int = 0, abstract: bool = False,
+    n_layers: int | None = None,
+) -> dict:
+    """Cache pytree matching the stacked-params scan structure; each leaf has
+    leading n_scan axis."""
+    n_layers = cfg.n_layers if n_layers is None else n_layers
+    n_scan = n_layers // cfg.period
+    specs = slot_specs(cfg, cross=cross)
+    out = {}
+    for spec in specs:
+        cap = spec.cache_capacity(cfg, seq_len)
+        slot: dict[str, Any] = {}
+        if spec.mixer == "attn":
+            base = (attn.kv_cache_spec(cfg, batch, cap, dtype) if abstract
+                    else attn.init_kv_cache(cfg, batch, cap, dtype))
+            slot["self"] = base
+        else:
+            base = (ssm_mod.ssm_state_spec(cfg, batch, dtype) if abstract
+                    else ssm_mod.init_ssm_state(cfg, batch, dtype))
+            slot["ssm"] = base
+        if spec.cross:
+            xc = (attn.kv_cache_spec(cfg, batch, n_enc, dtype) if abstract
+                  else attn.init_kv_cache(cfg, batch, n_enc, dtype))
+            slot["crosskv"] = xc
+        out[f"slot{spec.slot}"] = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((n_scan, *l.shape), l.dtype)
+            if abstract else jnp.broadcast_to(l[None], (n_scan, *l.shape)).copy(),
+            slot,
+        )
+    return out
+
+
+def apply_block_decode(
+    p: dict,
+    cfg: ModelConfig,
+    spec: SlotSpec,
+    x_t: jax.Array,       # (B, 1, d)
+    cache: dict,
+    lengths: jax.Array,   # (B,)
+    *,
+    mesh=None,
+    constrain: Constrain = _noop,
+) -> tuple[jax.Array, dict]:
+    new_cache: dict[str, Any] = {}
+    h = apply_norm(cfg.norm, p["norm1"], x_t, cfg.norm_eps)
+    if spec.mixer == "attn":
+        mix, kvc = attn.attn_decode(
+            p["mixer"], cfg, h, cache["self"], lengths,
+            rope_on=spec.rope_on, window=spec.window, constrain=constrain,
+        )
+        new_cache["self"] = kvc
+    else:
+        mix, st = ssm_mod.ssm_decode(p["mixer"], cfg, h, cache["ssm"],
+                                     constrain=constrain)
+        new_cache["ssm"] = st
+    x_t = x_t + mix
+    if spec.cross:
+        h = apply_norm(cfg.norm, p["norm_ca"], x_t, cfg.norm_eps)
+        y, _ = attn.attn_decode(
+            p["cross"], cfg, h, cache["crosskv"], lengths, cross=True,
+        )
+        x_t = x_t + y
+        new_cache["crosskv"] = cache["crosskv"]
+    if spec.ffn == "dense":
+        h = apply_norm(cfg.norm, p["norm2"], x_t, cfg.norm_eps)
+        x_t = x_t + apply_mlp(p["ffn"], h, gated=cfg.gated_mlp, act=cfg.act)
+    elif spec.ffn == "moe":
+        h = apply_norm(cfg.norm, p["norm2"], x_t, cfg.norm_eps)
+        y, _ = moe_mod.moe_forward(p["ffn"], cfg, h, mesh=mesh)
+        x_t = x_t + y
+    return x_t, new_cache
+
+
+def stack_decode(
+    params: dict,
+    cfg: ModelConfig,
+    x_t: jax.Array,
+    cache: dict,
+    lengths: jax.Array,
+    *,
+    cross: bool = False,
+    mesh=None,
+    constrain: Constrain = _noop,
+    unroll: bool = False,
+) -> tuple[jax.Array, dict]:
+    specs = slot_specs(cfg, cross=cross)
+
+    def body(x_t, xs):
+        slices, cache_slices = xs
+        new_slots = {}
+        for spec in specs:
+            key = f"slot{spec.slot}"
+            x_t, nc = apply_block_decode(
+                slices[key], cfg, spec, x_t, cache_slices[key], lengths,
+                mesh=mesh, constrain=constrain,
+            )
+            new_slots[key] = nc
+        return x_t, new_slots
+
+    x_t, new_cache = jax.lax.scan(body, x_t, (params, cache),
+                                  unroll=unroll)
+    return x_t, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also fills the decode caches
+# ---------------------------------------------------------------------------
+
+def apply_block_prefill(
+    p: dict,
+    cfg: ModelConfig,
+    spec: SlotSpec,
+    x: jax.Array,
+    cache: dict,
+    *,
+    positions: jax.Array,
+    mesh=None,
+    enc_out: jax.Array | None = None,
+    constrain: Constrain = _noop,
+) -> tuple[jax.Array, dict]:
+    new_cache: dict[str, Any] = {}
+    h = apply_norm(cfg.norm, p["norm1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        mix, (k, v) = attn.attn_forward(
+            p["mixer"], cfg, h,
+            rope_on=spec.rope_on, window=spec.window, causal=True,
+            positions=positions, constrain=constrain, return_kv=True,
+            mesh=mesh,
+        )
+        new_cache["self"] = attn.cache_fill(cache["self"], k, v, positions)
+    else:
+        mix, st = ssm_mod.ssm_forward(
+            p["mixer"], cfg, h, constrain=constrain, return_state=True,
+        )
+        new_cache["ssm"] = {
+            "conv": st["conv"].astype(cache["ssm"]["conv"].dtype),
+            "ssm": st["ssm"],
+        }
+    x = x + mix
+    if spec.cross:
+        assert enc_out is not None
+        h = apply_norm(cfg.norm, p["norm_ca"], x, cfg.norm_eps)
+        y, (xk, xv) = attn.attn_forward(
+            p["cross"], cfg, h, kv_ctx=enc_out, constrain=constrain,
+            return_kv=True,
+        )
+        x = x + y
+        B, F = xk.shape[0], xk.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+        new_cache["crosskv"] = attn.cache_fill(cache["crosskv"], xk, xv, enc_pos)
+    if spec.ffn == "dense":
+        h = apply_norm(cfg.norm, p["norm2"], x, cfg.norm_eps)
+        x = x + apply_mlp(p["ffn"], h, gated=cfg.gated_mlp, act=cfg.act)
+    elif spec.ffn == "moe":
+        h = apply_norm(cfg.norm, p["norm2"], x, cfg.norm_eps)
+        y, _ = moe_mod.moe_forward(p["ffn"], cfg, h, mesh=mesh)
+        x = x + y
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache
+
+
+def stack_prefill(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache: dict,
+    *,
+    positions: jax.Array | None = None,
+    cross: bool = False,
+    enc_out: jax.Array | None = None,
+    mesh=None,
+    constrain: Constrain = _noop,
+    unroll: bool = False,
+) -> tuple[jax.Array, dict]:
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    specs = slot_specs(cfg, cross=cross)
+
+    def body(x, xs):
+        slices, cache_slices = xs
+        new_slots = {}
+        for spec in specs:
+            key = f"slot{spec.slot}"
+            x, nc = apply_block_prefill(
+                slices[key], cfg, spec, x, cache_slices[key],
+                positions=positions, mesh=mesh, enc_out=enc_out,
+                constrain=constrain,
+            )
+            new_slots[key] = nc
+        return x, new_slots
+
+    x, new_cache = jax.lax.scan(body, x, (params, cache), unroll=unroll)
+    return x, new_cache

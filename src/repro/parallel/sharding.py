@@ -1,0 +1,280 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Model code annotates tensors with *logical* axis names (see models/layers.py
+for the vocabulary); this module maps them onto the physical mesh axes
+("pod", "data", "model") and materializes PartitionSpec / NamedSharding
+trees for pjit.
+
+Rule presets per (arch family, workload):
+
+  base        — megatron-style TP: heads/mlp/vocab → "model", batch →
+                ("pod","data"); weights otherwise replicated.
+  fsdp        — base + embed → "data": every weight matrix has exactly one
+                axis on "model" and its d_model axis on "data", so weight
+                state is fully sharded over the whole mesh (needed for ≥8B
+                dense archs and all optimizer states).
+  ep          — MoE: expert axis → "data" (expert parallelism; the a2a path
+                in models/moe.py matches), mlp → "model", embed → "data"
+                (FSDP for the dense trunk).
+  ssm         — ssm/heads axes → "model", embed → "data" (FSDP).
+  decode      — inference: KV/state batch stays on ("pod","data"); weights
+                as base/fsdp but *embed never sharded* (no FSDP gather per
+                step); long-context adds seq → "data" sequence parallelism.
+
+Activation logical axes (constrainer): batch → ("pod","data"),
+heads_act/kv_act/mlp_act/ssm_heads → "model", seq → None (or "data" in
+sequence-parallel sections), embed → None.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# mesh axes that shard the batch (data parallel), in nesting order
+BATCH_AXES = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping: logical axis name -> mesh axis (str | tuple | None)."""
+
+    rules: dict[str, Any]
+    name: str = "custom"
+
+    def mesh_axes(self, logical: str | None, mesh: Mesh):
+        if logical is None:
+            return None
+        ax = self.rules.get(logical, None)
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            present = tuple(a for a in ax if a in mesh.shape)
+            return present if present else None
+        return ax if ax in mesh.shape else None
+
+
+def _weight_rules(
+    *, fsdp: bool, expert_axis: str | None = None
+) -> dict[str, Any]:
+    r: dict[str, Any] = {
+        "vocab": "model",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "ssm": "model",
+        "embed": "data" if fsdp else None,
+        "expert": expert_axis,
+        "conv": None,
+        "layers": None,
+        # activations
+        "batch": BATCH_AXES,
+        "batch_logits": BATCH_AXES,   # batch axes for the CE logits
+        "seq": None,
+        "heads_act": "model",
+        "kv_act": "model",
+        "mlp_act": "model",
+        "ssm_heads": "model",
+        "vocab_act": "model",
+    }
+    return r
+
+
+_PRESETS: dict[str, ShardingRules] = {
+    "base": ShardingRules(_weight_rules(fsdp=False), "base"),
+    "fsdp": ShardingRules(_weight_rules(fsdp=True), "fsdp"),
+    "ep": ShardingRules(_weight_rules(fsdp=True, expert_axis="data"), "ep"),
+    "decode": ShardingRules(_weight_rules(fsdp=False), "decode"),
+    # long-context decode: cache/activation seq over "data" (sequence-
+    # parallel), weights like the EP/FSDP preset — experts MUST stay
+    # sharded or a 400B MoE's weights blow the per-chip HBM at B=1
+    "decode_sp": ShardingRules(
+        {**_weight_rules(fsdp=True, expert_axis="data"),
+         "seq": "data", "kv_seq": "data"},
+        "decode_sp",
+    ),
+    # beyond-paper perf preset (§Perf): ZeRO-3 — batch data-parallel over
+    # the WHOLE mesh, weights/optimizer fully sharded (embed→data,
+    # ff/heads→model), activations unconstrained.  Replaces per-layer TP
+    # activation all-reduces (O(B·S·d) per layer) with per-layer weight
+    # all-gathers (O(params/chips)) — a large win whenever
+    # B_loc·S·d  >  layer_params/chips.
+    "zero3": ShardingRules(
+        {**_weight_rules(fsdp=True),
+         "batch": ("pod", "data", "model"),
+         "heads_act": None, "kv_act": None, "mlp_act": None,
+         "ssm_heads": None},
+        "zero3",
+    ),
+    # zero3 for MoE: experts stay on "data" (EP all-to-all within the data
+    # ring), dense trunk/batch as zero3
+    "zero3_ep": ShardingRules(
+        {**_weight_rules(fsdp=True, expert_axis="data"),
+         "batch": ("pod", "data", "model"),
+         "heads_act": None, "kv_act": None, "mlp_act": None,
+         "ssm_heads": None},
+        "zero3_ep",
+    ),
+}
+
+
+def preset(name: str) -> ShardingRules:
+    return _PRESETS[name]
+
+
+def rules_for(cfg, workload: str) -> ShardingRules:
+    """Pick the rule preset for (model config, workload).
+
+    workload: "train" | "prefill" | "decode" | "decode_long"
+
+    Training default is the §Perf-winning zero3 preset for attention-based
+    non-MoE archs (measured 3–13× lower collective term than TP/FSDP at
+    train_4k shapes — see EXPERIMENTS.md §Perf).  MoE keeps the EP preset
+    (the expert all-to-all wants tokens resident on the "data" ring), and
+    SSM stacks keep TP (zero3 measured 4× WORSE there: the SSD state
+    einsums reshard pathologically under full-mesh batch sharding).  The
+    paper-era baselines remain available as presets ("base"/"fsdp").
+    """
+    if workload == "train":
+        if cfg.moe is not None:
+            return _PRESETS["ep"]
+        if cfg.family in ("ssm", "hybrid"):
+            if cfg.param_count_estimate() >= 4_000_000_000:
+                return _PRESETS["fsdp"]
+            return _PRESETS["base"]
+        return _PRESETS["zero3"]
+    if workload in ("decode", "prefill"):
+        if cfg.moe is not None:
+            return _PRESETS["ep"]
+        return _PRESETS["decode"]
+    if workload == "decode_long":
+        return _PRESETS["decode_sp"]
+    raise ValueError(f"unknown workload {workload}")
+
+
+def logical_to_spec(
+    axes: tuple[str | None, ...], rules: ShardingRules, mesh: Mesh
+) -> P:
+    parts = []
+    used: set[str] = set()
+    for lg in axes:
+        ax = rules.mesh_axes(lg, mesh)
+        # a mesh axis may appear at most once in a spec
+        if ax is not None:
+            flat = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in flat):
+                ax = None
+            else:
+                used.update(flat)
+        parts.append(ax)
+    return P(*parts)
+
+
+def spec_tree(axes_tree: PyTree, rules: ShardingRules, mesh: Mesh) -> PyTree:
+    """Map a tree of logical-axes tuples to a tree of PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda axes: logical_to_spec(axes, rules, mesh),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def named_sharding_tree(axes_tree: PyTree, rules: ShardingRules,
+                        mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        spec_tree(axes_tree, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def spec_for(shape: tuple[int, ...], axes: tuple[str | None, ...],
+             rules: ShardingRules, mesh: Mesh) -> P:
+    """Shape-aware spec: drops axes whose dim is not divisible by the mesh
+    axis product (pjit in_shardings require exact divisibility)."""
+    spec = logical_to_spec(axes, rules, mesh)
+    parts = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            parts.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        parts.append(ax if dim % size == 0 else None)
+    return P(*parts)
+
+
+def param_sharding_tree(param_tree: PyTree, rules: ShardingRules,
+                        mesh: Mesh) -> PyTree:
+    """NamedSharding tree from a tree of Param leaves (shape-aware)."""
+    from repro.models.param import is_param
+
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, spec_for(p.shape, p.axes, rules, mesh)),
+        param_tree,
+        is_leaf=is_param,
+    )
+
+
+def constrainer(rules: ShardingRules, mesh: Mesh):
+    """Returns constrain(x, logical_axes) for in-graph activation hints.
+
+    An axis constraint is dropped when the dim is not divisible by the
+    mesh-axis product — forcing GSPMD to shard 12 heads 16 ways triggers
+    "involuntary full rematerialization" (replicate + re-partition copies),
+    which is strictly worse than leaving the dim to sharding propagation.
+    """
+
+    def constrain(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+        if mesh.empty:
+            return x
+        spec = logical_to_spec(axes, rules, mesh)
+        parts = []
+        dropped: list[str] = []
+        for dim, ax in zip(x.shape, spec):
+            if ax is None:
+                parts.append(None)
+                continue
+            axs = list(ax) if isinstance(ax, tuple) else [ax]
+            # tuple-prefix fallback: a 256-row batch on a 512-chip mesh
+            # still shards over the ("pod","data") prefix
+            while axs:
+                size = 1
+                for a in axs:
+                    size *= mesh.shape[a]
+                if dim % size == 0:
+                    break
+                dropped.append(axs.pop())
+            parts.append(tuple(axs) if len(axs) > 1 else
+                         (axs[0] if axs else None))
+        # Sequence-parallel fallback: when a heads axis cannot shard (e.g.
+        # 40 heads on model=16), GSPMD would otherwise REPLICATE the whole
+        # attention computation across that mesh axis — give the freed
+        # axis to the seq dim instead (context parallelism).
+        for ax in dropped:
+            for i, lg in enumerate(axes):
+                if (lg == "seq" and parts[i] is None
+                        and x.shape[i] % mesh.shape[ax] == 0):
+                    parts[i] = ax
+                    break
+        if all(p is None for p in parts):
+            # a fully-replicated constraint is a no-op at best and crashes
+            # the partitioner inside partial-manual shard_map regions
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*parts))
+        )
+
+    return constrain
+
+
+def batch_spec(mesh: Mesh, *extra: str | None) -> P:
+    """PartitionSpec for (batch, *extra) arrays: batch over ("pod","data")."""
+    present = tuple(a for a in BATCH_AXES if a in mesh.shape)
+    return P(present if present else None, *extra)

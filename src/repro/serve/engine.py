@@ -1,0 +1,169 @@
+"""Serving engine: batched prefill/decode over the sharded model.
+
+``make_prefill_step`` / ``make_decode_step`` build the pjit-ready pure
+functions the dry-run lowers (decode_32k / long_500k cells lower
+``serve_step`` = one decode token against a seq_len KV cache, per the
+assignment).  ``ServeEngine`` is the host-side loop used by the examples
+and by the provisioner's serve workers: it batches queued requests,
+prefills them into free cache rows, decodes round-robin, and reports queue
+depth — the demand signal the provisioner scales on (paper §2: "jobs
+waiting for resources").
+
+Continuous batching, engine-style: each cache row is a slot; finished
+sequences free their slot immediately and the next queued request is
+prefilled into it while other rows keep decoding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import ShardingRules, constrainer
+
+PyTree = Any
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, rules: ShardingRules):
+    constrain = constrainer(rules, mesh)
+
+    def prefill_step(params, batch, cache):
+        return model_lib.prefill(
+            params, cfg, batch, cache, mesh=mesh, constrain=constrain
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh, rules: ShardingRules):
+    constrain = constrainer(rules, mesh)
+
+    def decode_step(params, tokens_t, cache, lengths):
+        return model_lib.decode_step(
+            params, cfg, tokens_t, cache, lengths, mesh=mesh,
+            constrain=constrain,
+        )
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # int32 (len,)
+    max_new_tokens: int = 16
+    submitted_at: float = 0.0
+    # filled on completion
+    output: list | None = None
+    finished_at: float = 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    remaining: int = 0
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    """Host loop: queue -> slots -> prefill/decode. Single-process; the
+    multi-worker serve path shards the *batch rows* of one engine across
+    the provisioned worker group's mesh."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, *,
+                 batch_slots: int = 4, max_seq: int = 256, mesh=None,
+                 rules: ShardingRules | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.queue: deque[Request] = deque()
+        self.done: dict[int, Request] = {}
+        mesh = mesh if mesh is not None else jax.sharding.Mesh(
+            np.array(jax.devices()[:1]), ("data",)
+        )
+        from repro.parallel.sharding import rules_for
+        rules = rules or rules_for(cfg, "decode")
+        self._prefill_one = jax.jit(make_prefill_step(cfg, mesh, rules))
+        self._decode = jax.jit(make_decode_step(cfg, mesh, rules))
+        self.cache = model_lib.init_cache(cfg, batch_slots, max_seq)
+        self.lengths = jnp.zeros((batch_slots,), jnp.int32)
+        self.last_tok = jnp.zeros((batch_slots, 1), jnp.int32)
+        self._reqs: dict[int, Request] = {}
+
+    # -- demand signal (paper §2) -----------------------------------------
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def busy_slots(self) -> int:
+        return sum(1 for s in self.slots if s.rid >= 0)
+
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    # -- engine tick --------------------------------------------------------
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot.rid >= 0 or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self._reqs[req.rid] = req
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            # per-row prefill: run a batch-1 prefill into a fresh cache and
+            # splice the row in (host-side; fine at example scale)
+            row_cache = model_lib.init_cache(self.cfg, 1, self.max_seq)
+            logits, row_cache, row_len = self._prefill_one(
+                self.params, {"tokens": prompt}, row_cache
+            )
+            self.cache = jax.tree_util.tree_map(
+                lambda full, row: full.at[:, i:i + 1].set(row), self.cache,
+                row_cache,
+            )
+            self.lengths = self.lengths.at[i].set(row_len[0])
+            nxt = jnp.argmax(logits[0]).astype(jnp.int32)
+            self.last_tok = self.last_tok.at[i, 0].set(nxt)
+            slot.rid = req.rid
+            slot.remaining = req.max_new_tokens - 1
+            slot.tokens = [int(nxt)]
+
+    def _retire(self):
+        for slot in self.slots:
+            if slot.rid >= 0 and slot.remaining <= 0:
+                req = self._reqs.pop(slot.rid)
+                req.output = list(slot.tokens)
+                req.finished_at = time.time()
+                self.done[req.rid] = req
+                slot.rid = -1
+                slot.tokens = []
+
+    def step(self) -> int:
+        """One engine tick. Returns number of active slots."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.rid >= 0]
+        if active:
+            logits, self.cache, self.lengths = self._decode(
+                self.params, self.last_tok, self.cache, self.lengths
+            )
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.last_tok = nxt[:, None]
+            for i in active:
+                slot = self.slots[i]
+                slot.tokens.append(int(nxt[i]))
+                slot.remaining -= 1
+        self._retire()
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> int:
+        ticks = 0
+        while (self.queue or self.busy_slots()) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks

@@ -1,0 +1,3 @@
+from repro.train.optimizer import adamw_init, adamw_update, OptimizerConfig
+from repro.train.schedule import lr_schedule
+from repro.train.train_step import make_train_step, TrainState

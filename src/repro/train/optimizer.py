@@ -1,0 +1,111 @@
+"""AdamW implemented on raw pytrees (no optax dependency).
+
+Moments follow the config's ``optimizer_state_dtype`` policy: fp32 for
+fidelity on ≤32B archs, bf16 to fit the 400B MoE in 256 × 16 GB HBM (the
+dry-run's memory_analysis() validates the fit).  The second moment is
+stored as rsqrt-friendly fp32 even under the bf16 policy when
+``keep_nu_fp32`` is set — empirically the cheap half of the trade.
+
+Sharding: moment trees inherit the parameter logical axes, so FSDP shards
+optimizer state over "data" exactly like weights (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    keep_nu_fp32: bool = True
+
+
+def adamw_init(params: PyTree, cfg: OptimizerConfig) -> PyTree:
+    mu_dt = jnp.dtype(cfg.state_dtype)
+    nu_dt = jnp.float32 if cfg.keep_nu_fp32 else mu_dt
+
+    return {
+        "mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, mu_dt), params
+        ),
+        "nu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, nu_dt), params
+        ),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    params: PyTree,
+    grads: PyTree,
+    state: PyTree,
+    cfg: OptimizerConfig,
+    lr: jax.Array,
+) -> tuple[PyTree, PyTree, dict]:
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd_math(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = mu_n / c1
+        nhat = nu_n / c2
+        step = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = p.astype(jnp.float32) - lr * step
+        return (
+            p_n.astype(p.dtype),
+            mu_n.astype(mu.dtype),
+            nu_n.astype(nu.dtype),
+        )
+
+    # Giant stacked leaves (e.g. a 400B MoE's (n_scan, E, d, f) expert
+    # stack: ~3.8 GB bf16 PER SHARD) would materialize several fp32
+    # temporaries at once if updated in one fused region — lax.map over
+    # the leading (scan) axis caps the fp32 working set at 1/n_scan.
+    _CHUNK_THRESHOLD = 1 << 27  # elements
+
+    def upd(p, g, mu, nu):
+        if p.ndim >= 2 and p.size >= _CHUNK_THRESHOLD and p.shape[0] > 1:
+            return jax.lax.map(
+                lambda args: upd_math(*args), (p, g, mu, nu)
+            )
+        return upd_math(p, g, mu, nu)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, mu, nu)
+           for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+    metrics = {"grad_norm": gnorm, "clip_factor": clip}
+    return new_p, new_state, metrics

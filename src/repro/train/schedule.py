@@ -1,0 +1,22 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_schedule(
+    step,
+    *,
+    peak: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    min_ratio: float = 0.1,
+):
+    """Linear warmup → cosine decay to min_ratio*peak."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak * s / max(warmup_steps, 1)
+    prog = jnp.clip(
+        (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = peak * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup_steps, warm, cos)

@@ -1,0 +1,245 @@
+"""The jit'd training step: loss → grads → (compressed) reduce → AdamW.
+
+``make_train_step`` builds a pjit-ready function over (TrainState, batch);
+data parallelism comes from batch sharding, tensor/expert parallelism from
+the weight PartitionSpecs, remat from the model's scan policy.
+
+Microbatch accumulation: ``accum_steps > 1`` splits the per-step batch on
+the leading axis and lax.scan's the fwd+bwd, accumulating fp32 grads —
+the standard trade of activation memory for (re)compute; the dry-run
+memory_analysis is how a config picks the smallest accum that fits.
+
+Cross-pod gradient compression: with ``grad_compression="int8"`` the grads
+are *re-reduced* over the "pod" axis via parallel/collectives (int8 wire
+format).  In-pod reduction stays in XLA's native bf16/fp32 psum (ICI is
+fast; compression there costs more in quantize latency than it saves).
+In that mode the loss is computed with pvary'd batch over pods so XLA's
+own all-reduce does not already sum across pods.  For the dry-run roofline
+both variants lower; EXPERIMENTS.md quantifies the collective-bytes delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.parallel import collectives
+from repro.parallel.sharding import (
+    ShardingRules, constrainer, named_sharding_tree, spec_tree, batch_spec,
+)
+from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update
+from repro.train.schedule import lr_schedule
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: PyTree
+    step: jax.Array
+    rng: jax.Array
+
+
+def init_train_state(params: PyTree, opt_cfg: OptimizerConfig,
+                     rng: jax.Array) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params, opt_cfg),
+        step=jnp.zeros((), jnp.int32),
+        rng=rng,
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig,
+    mesh: Mesh,
+    rules: ShardingRules,
+    *,
+    accum_steps: int = 1,
+    remat: str = "full",
+    grad_compression: str | None = None,
+    lr_kwargs: dict | None = None,
+    param_axes: PyTree = None,
+    unroll: bool = False,
+) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    use_compression = grad_compression == "int8" and "pod" in mesh.shape
+    if use_compression and rules.name not in ("base", "ep", "decode"):
+        raise ValueError(
+            "int8 grad compression composes with the TP presets (base/ep); "
+            "FSDP weight all-gathers and zero3 batch-over-model sharding "
+            "trip an XLA subgroup-manual partitioner check (upstream "
+            "limitation) inside the partial-manual pod region"
+        )
+    lr_kwargs = lr_kwargs or {}
+    grad_specs = (
+        spec_tree(param_axes, rules, mesh) if param_axes is not None else None
+    )
+    if use_compression:
+        # inside the partial-manual (pod) shard_map, activation constraints
+        # must not name the manual axis: batch shards over "data" only.
+        # vocab_act is disabled too — the CE scatter over a sharded vocab
+        # trips an XLA subgroup-manual partitioner check (upstream).
+        inner_rules = dataclasses.replace(
+            rules, rules={**rules.rules,
+                          "batch": tuple(a for a in rules.rules["batch"]
+                                         if a != "pod"),
+                          "batch_logits": None,
+                          "vocab_act": None})
+        constrain = constrainer(inner_rules, mesh)
+    else:
+        constrain = constrainer(rules, mesh)
+
+    def loss_for_batch(params, batch):
+        return model_lib.loss_fn(
+            params, cfg, batch, mesh=mesh, constrain=constrain, remat=remat,
+            unroll=unroll,
+        )
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for_batch, has_aux=True
+            )(params, batch)
+            return grads, metrics
+        # microbatch accumulation over the leading batch axis
+        def split(x):
+            b = x.shape[0]
+            assert b % accum_steps == 0, (b, accum_steps)
+            return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            g_acc, m_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_for_batch, has_aux=True
+            )(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g
+            )
+            m_acc = jax.tree_util.tree_map(lambda a, b: a + b, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        m0 = {
+            "loss": jnp.zeros((), jnp.float32),
+            "ce": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32),
+            "moe_aux": jnp.zeros((), jnp.float32),
+            "tokens": jnp.zeros((), jnp.float32),
+        }
+        (g, m), _ = jax.lax.scan(body, (g0, m0), micro)
+        inv = 1.0 / accum_steps
+        g = jax.tree_util.tree_map(lambda x: x * inv, g)
+        m = {k: v * inv if k != "tokens" else v for k, v in m.items()}
+        return g, m
+
+    def compute_grads_compressed(params, batch, step):
+        """Manual over the "pod" axis only (data/model stay auto): each pod
+        derives grads from its own batch shard, then the pods exchange an
+        int8-quantized mean instead of XLA's bf16/fp32 all-reduce.  Not
+        composable with the MoE EP path (which opens its own full-manual
+        shard_map) — MoE configs keep compression off."""
+
+        def body(params, batch, step):
+            grads, metrics = compute_grads(params, batch)
+            leaves, treedef = jax.tree_util.tree_flatten(grads)
+            out = []
+            for i, g in enumerate(leaves):
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(17), step + jnp.uint32(i)
+                )
+                out.append(collectives.compressed_psum(g, ("pod",), key))
+            grads = jax.tree_util.tree_unflatten(treedef, out)
+            metrics = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(m, "pod"), metrics
+            )
+            return grads, metrics
+
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), jax.tree_util.tree_map(lambda _: P("pod"), batch),
+                      P()),
+            out_specs=(P(), P()),
+            axis_names={"pod"},
+            check_vma=False,
+        )(params, batch, step)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if use_compression:
+            grads, metrics = compute_grads_compressed(
+                state.params, batch, state.step.astype(jnp.uint32)
+            )
+        else:
+            grads, metrics = compute_grads(state.params, batch)
+        lr = lr_schedule(state.step, **lr_kwargs)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, opt_cfg, lr
+        )
+        metrics = {**metrics, **opt_metrics, "lr": lr}
+        new_state = TrainState(
+            params=new_params,
+            opt=new_opt,
+            step=state.step + 1,
+            rng=jax.random.fold_in(state.rng, 0),
+        )
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers for pjit-ing the step
+# ---------------------------------------------------------------------------
+
+def state_shardings(
+    param_tree: PyTree, rules: ShardingRules, mesh: Mesh
+) -> TrainState:
+    """NamedSharding tree matching TrainState(params, opt, step, rng).
+    `param_tree` is the tree of Param leaves (shape-aware specs)."""
+    from repro.parallel.sharding import param_sharding_tree
+
+    p_sh = param_sharding_tree(param_tree, rules, mesh)
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        params=p_sh,
+        opt={
+            "mu": p_sh,
+            "nu": p_sh,
+            "count": rep,
+        },
+        step=rep,
+        rng=rep,
+    )
+
+
+def batch_shardings(batch_spec_tree: dict, mesh: Mesh) -> dict:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        batch_spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def train_batch_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    out = {
+        "tokens": batch_spec(mesh, None),
+        "labels": batch_spec(mesh, None),
+    }
+    if cfg.encoder is not None:
+        out["frames"] = batch_spec(mesh, None, None)
+    if cfg.frontend is not None:
+        out["patches"] = batch_spec(mesh, None, None)
+    return out

@@ -1,0 +1,9 @@
+"""Test config. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see 1 CPU device (the dry-run sets 512 in its own process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

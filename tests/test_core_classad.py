@@ -1,0 +1,84 @@
+"""ClassAd expression language + symmetric matchmaking (paper C3)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.classad import ClassAdExpr, UNDEFINED, symmetric_match
+
+
+def test_basic_comparisons():
+    e = ClassAdExpr("request_gpus >= 1 and request_memory <= 64")
+    assert e.evaluate({"request_gpus": 2, "request_memory": 16})
+    assert not e.evaluate({"request_gpus": 0, "request_memory": 16})
+
+
+def test_paper_example_attributes():
+    """Attributes from the paper's Fig 1 INI (GLIDEIN_Site etc.)."""
+    e = ClassAdExpr('GLIDEIN_Site == "SDSC-PRP" and gpu_type in '
+                    '("A100", "A40", "V100")')
+    assert e.evaluate({"GLIDEIN_Site": "SDSC-PRP", "gpu_type": "A100"})
+    assert not e.evaluate({"GLIDEIN_Site": "SDSC-PRP",
+                           "gpu_type": "K80"})
+
+
+def test_my_target_scoping():
+    """HTCondor scoping: bare names resolve MY first, then TARGET."""
+    e = ClassAdExpr("TARGET.cpus >= MY.request_cpus")
+    assert e.evaluate({"request_cpus": 4}, {"cpus": 8})
+    assert not e.evaluate({"request_cpus": 16}, {"cpus": 8})
+    e2 = ClassAdExpr("cpus >= request_cpus")  # cpus only in target
+    assert e2.evaluate({"request_cpus": 4}, {"cpus": 8})
+
+
+def test_undefined_semantics():
+    """Missing attributes are UNDEFINED: falsy, comparisons False."""
+    e = ClassAdExpr("nonexistent_attr > 5")
+    assert not e.evaluate({})
+    assert not ClassAdExpr("nonexistent_attr == nonexistent_attr"
+                           ).evaluate({})
+
+
+def test_injection_rejected():
+    for bad in ("().__class__", "open('/etc/passwd')",
+                "[x for x in range(3)]", "lambda: 1",
+                "__import__('os')", "my.__dict__",
+                "nonexistent_attr is not None"):
+        with pytest.raises(ValueError):
+            ClassAdExpr(bad)
+
+
+def test_empty_expr_vacuously_true():
+    assert ClassAdExpr("").evaluate({"anything": 1})
+    assert ClassAdExpr(None).evaluate({})
+    assert ClassAdExpr("True").evaluate({})
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    want=st.integers(0, 8), have=st.integers(0, 8),
+    mem_w=st.integers(1, 64), mem_h=st.integers(1, 64),
+)
+def test_symmetric_match_resource_sanity(want, have, mem_w, mem_h):
+    """Property: a job never matches an offer with fewer resources,
+    regardless of expressions (the quantity guard)."""
+    job = {"request_gpus": want, "request_memory": mem_w}
+    offer = {"gpus": have, "memory": mem_h}
+    ok = symmetric_match(job, offer)
+    assert ok == (want <= have and mem_w <= mem_h)
+
+
+def test_filter_pushdown_symmetry():
+    """The SAME expression used provisioner-side (job ad as MY) and
+    worker-side (worker ad as MY, job as TARGET) must agree on matches —
+    the paper's C3 push-down guarantee."""
+    flt = 'TARGET.arch == "mamba2-1.3b" if False else arch == "mamba2-1.3b"'
+    f = ClassAdExpr('arch == "mamba2-1.3b"')
+    job_good = {"arch": "mamba2-1.3b", "request_gpus": 1}
+    job_bad = {"arch": "qwen3-32b", "request_gpus": 1}
+    offer = {"gpus": 4}
+    # provisioner side: evaluate over job ad
+    assert f.evaluate(job_good)
+    assert not f.evaluate(job_bad)
+    # worker side: START expr, worker=MY, job=TARGET; arch missing from
+    # worker ad so it resolves in TARGET (the job) — same verdicts
+    assert symmetric_match(job_good, offer, start_expr=f)
+    assert not symmetric_match(job_bad, offer, start_expr=f)

@@ -1,0 +1,91 @@
+"""Pallas flash-attention kernel vs the pure-jnp oracle (interpret mode),
+swept over shapes/dtypes/mask modes, plus the chunked production path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+
+CASES = [
+    # B, Sq, Skv, Hq, Hkv, Dh, causal, window, softcap
+    (2, 256, 256, 8, 4, 64, True, None, None),
+    (1, 200, 200, 4, 4, 64, True, None, None),        # unaligned seq
+    (2, 128, 384, 8, 2, 128, True, 64, None),         # window + GQA
+    (1, 1, 256, 8, 4, 64, True, None, None),          # decode row
+    (2, 64, 128, 4, 4, 32, False, None, None),        # cross-attn
+    (1, 96, 96, 6, 2, 64, True, 32, None),            # window < Sq
+    (2, 128, 128, 4, 2, 64, True, None, 30.0),        # logit softcap
+    (1, 300, 100, 4, 1, 64, True, None, None),        # Skv < Sq, MQA
+]
+
+
+def _mk(rng, B, Sq, Skv, Hq, Hkv, Dh, dtype):
+    q = jnp.asarray(rng.standard_normal((B, Sq, Hq, Dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Skv, Hkv, Dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Skv, Hkv, Dh)), dtype)
+    qp = jnp.broadcast_to(
+        jnp.arange(Skv - Sq, Skv, dtype=jnp.int32), (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+    kp = kp.at[:, ::7].set(-1)  # empty cache slots
+    return q, k, v, qp, kp
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Skv,Hq,Hkv,Dh,causal,window,softcap", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matches_oracle(rng, B, Sq, Skv, Hq, Hkv, Dh, causal,
+                               window, softcap, dtype):
+    q, k, v, qp, kp = _mk(rng, B, Sq, Skv, Hq, Hkv, Dh, dtype)
+    out = flash_attention_pallas(
+        q, k, v, qp, kp, causal=causal, window=window, softcap=softcap,
+        interpret=True)
+    ref = attention_reference(
+        q, k, v, qp, kp, causal=causal, window=window, softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("Sq,Skv", [(512, 512), (1024, 256), (384, 768)])
+def test_chunked_path_matches_oracle(rng, Sq, Skv):
+    """The production CPU path (ops.flash_attention) chunks over queries;
+    must equal the dense oracle exactly in semantics."""
+    q, k, v, qp, kp = _mk(rng, 2, Sq, Skv, 4, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, qp, kp, causal=True)
+    ref = attention_reference(q, k, v, qp, kp, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_fully_masked_rows_zero(rng):
+    """Rows whose whole kv set is invalid must return 0 (no NaN)."""
+    q, k, v, qp, kp = _mk(rng, 1, 8, 16, 2, 2, 32, jnp.float32)
+    kp = jnp.full_like(kp, -1)
+    out = flash_attention_pallas(q, k, v, qp, kp, causal=True,
+                                 interpret=True)
+    assert not bool(jnp.any(jnp.isnan(out)))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+def test_decode_rolling_window_consistency(rng):
+    """Decode with a rolling buffer (kv_pos holds absolute positions) must
+    equal attention over the logically-ordered window."""
+    B, C, Hq, Hkv, Dh, W = 1, 64, 4, 2, 32, 32
+    pos_abs = jnp.arange(100, 100 + C, dtype=jnp.int32)  # slot i: pos
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, C, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, C, Hkv, Dh)), jnp.float32)
+    qp = jnp.asarray([[100 + C]], jnp.int32)
+    kp = pos_abs[None, :]
+    # rotate the buffer: same (pos, k, v) triplets, scrambled slot order
+    perm = np.asarray(rng.permutation(C))
+    out1 = flash_attention_pallas(q, k, v, qp, kp, causal=True, window=W,
+                                  interpret=True)
+    out2 = flash_attention_pallas(q, k[:, perm], v[:, perm], qp,
+                                  kp[:, perm], causal=True, window=W,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-5)

@@ -1,0 +1,87 @@
+"""SSD Pallas kernel + chunked-jnp path vs the sequential-scan oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd.ops import ssd_chunked_jnp, ssd_decode_step
+from repro.kernels.ssd.ref import ssd_reference
+
+CASES = [
+    # B, S, H, P, G, N, chunk, init
+    (2, 512, 4, 64, 1, 128, 256, False),
+    (1, 300, 8, 32, 2, 64, 128, True),
+    (2, 64, 2, 64, 1, 32, 256, False),    # S < chunk
+    (1, 128, 4, 16, 4, 16, 32, True),     # many groups
+]
+
+
+def _mk(rng, B, S, H, P, G, N, dtype, init):
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), dtype)
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, H))) * 0.3 + 0.01,
+                     jnp.float32)
+    A = -jnp.asarray(np.abs(rng.standard_normal(H)) + 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, G, N)) * 0.3, dtype)
+    Cm = jnp.asarray(rng.standard_normal((B, S, G, N)) * 0.3, dtype)
+    D = jnp.asarray(rng.standard_normal(H), jnp.float32)
+    st = (jnp.asarray(np.abs(rng.standard_normal((B, H, P, N))) * 0.1,
+                      jnp.float32) if init else None)
+    return x, dt, A, Bm, Cm, D, st
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk,init", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matches_oracle(rng, B, S, H, P, G, N, chunk, init, dtype):
+    x, dt, A, Bm, Cm, D, st = _mk(rng, B, S, H, P, G, N, dtype, init)
+    y, fin = ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk,
+                        initial_state=st, interpret=True)
+    yr, finr = ssd_reference(x, dt, A, Bm, Cm, D, initial_state=st)
+    tol = 2e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(finr),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk,init", CASES[:2])
+def test_chunked_jnp_matches_oracle(rng, B, S, H, P, G, N, chunk, init):
+    x, dt, A, Bm, Cm, D, st = _mk(rng, B, S, H, P, G, N, jnp.float32, init)
+    y, fin = ssd_chunked_jnp(x, dt, A, Bm, Cm, D, chunk=chunk,
+                             initial_state=st)
+    yr, finr = ssd_reference(x, dt, A, Bm, Cm, D, initial_state=st)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(finr),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_decode_steps_match_full_sequence(rng):
+    """Running ssd_decode_step token-by-token must reproduce the full-seq
+    scan — the prefill->decode handoff invariant."""
+    B, S, H, P, G, N = 1, 48, 2, 16, 1, 32
+    x, dt, A, Bm, Cm, D, _ = _mk(rng, B, S, H, P, G, N, jnp.float32, False)
+    y_full, state_full = ssd_reference(x, dt, A, Bm, Cm, D)
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        state, y_t = ssd_decode_step(
+            state, x[:, t].reshape(B, H, P), dt[:, t], A, Bm[:, t],
+            Cm[:, t], D)
+        ys.append(y_t)
+    y_step = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_state_passthrough_on_padding(rng):
+    """dt=0 steps must not change the state (padding invariant the
+    wrapper relies on)."""
+    B, S, H, P, G, N = 1, 32, 2, 16, 1, 16
+    x, dt, A, Bm, Cm, D, st = _mk(rng, B, S, H, P, G, N, jnp.float32, True)
+    dt0 = jnp.zeros_like(dt)
+    _, fin = ssd_chunked_jnp(x, dt0, A, Bm, Cm, D, chunk=16,
+                             initial_state=st)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(st), atol=1e-6)

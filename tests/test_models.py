@@ -1,0 +1,140 @@
+"""Per-arch smoke tests (reduced configs, CPU) + serving consistency.
+
+The strongest integration check: prefill + token-by-token decode must
+reproduce the teacher-forced forward logits for every architecture family
+(attention KV caches, SSM states, rolling windows, cross-attention)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, reduced_config
+from repro.data.pipeline import stub_modality_inputs
+from repro.models import model as model_lib
+from repro.models.param import materialize
+
+ATOL = 2e-2  # fp32 reduced configs; chunked-vs-dense attention reorders sums
+
+
+def _params(cfg, seed=0):
+    return materialize(model_lib.init_model(cfg), jax.random.PRNGKey(seed))
+
+
+def _batch(cfg, rng, B=2, S=32):
+    St = S - (cfg.frontend.n_prefix if cfg.frontend else 0)
+    toks = rng.integers(0, cfg.vocab_size, size=(B, St + 1))
+    batch = {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+    }
+    for k, v in stub_modality_inputs(cfg, B).items():
+        batch[k] = jnp.asarray(v)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = reduced_config(arch)
+    params = _params(cfg)
+    batch = _batch(cfg, rng)
+    logits, aux = model_lib.forward(params, cfg, batch, remat="none")
+    St = batch["tokens"].shape[1]
+    assert logits.shape == (2, St, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_one_train_step_decreases_nothing_nan(arch, rng):
+    """One SGD-ish step must produce finite loss/grads (per-arch smoke)."""
+    cfg = reduced_config(arch)
+    params = _params(cfg)
+    batch = _batch(cfg, rng)
+
+    def loss(p):
+        return model_lib.loss_fn(p, cfg, batch, remat="none")[0]
+
+    l0, grads = jax.value_and_grad(loss)(params)
+    assert bool(jnp.isfinite(l0))
+    gnorm = sum(
+        float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+        for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+    # one step in the -grad direction lowers the loss (sanity of autodiff)
+    lr = 1e-2
+    p2 = jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                      ).astype(p.dtype), params, grads)
+    l1 = loss(p2)
+    assert float(l1) < float(l0) + 1e-3, (arch, float(l0), float(l1))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_matches_forward(arch, rng):
+    """Greedy decode continuation from a prefix must produce the same
+    logits as the teacher-forced forward pass at those positions."""
+    cfg = reduced_config(arch)
+    params = _params(cfg)
+    B, S = 1, 24
+    batch = _batch(cfg, rng, B=B, S=S)
+    tokens = batch["tokens"]
+    St = tokens.shape[1]
+    n_pre = St // 2
+
+    # teacher-forced logits for the whole sequence
+    full_logits, _ = model_lib.forward(params, cfg, batch, remat="none")
+
+    # prefill the first half, then decode with the *same* ground-truth
+    # tokens and compare logits position by position
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = tokens[:, :n_pre]
+    pre_batch.pop("labels")
+    cache = model_lib.init_cache(cfg, B, S + 64)
+    logits, cache, lengths = model_lib.prefill(params, cfg, pre_batch,
+                                               cache)
+    prefix = cfg.frontend.n_prefix if cfg.frontend else 0
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, n_pre - 1]),
+        atol=ATOL, rtol=ATOL)
+
+    for t in range(n_pre, St):
+        tok = tokens[:, t - 1:t]  # careful: feed gt token t-1? no:
+        # decode_step consumes the token AT position (prefix+t) which is
+        # tokens[:, t]; its output logits predict position t+1.
+        tok = tokens[:, t:t + 1]
+        logits, cache, lengths = model_lib.decode_step(
+            params, cfg, tok, cache, lengths)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, t]),
+            atol=ATOL, rtol=ATOL,
+            err_msg=f"{arch}: decode logits diverge at position {t}")
+
+
+def test_vlm_prefix_handling(rng):
+    """VLM: patches prepend to the sequence; logits cover text only."""
+    cfg = reduced_config("llava-next-mistral-7b")
+    params = _params(cfg)
+    batch = _batch(cfg, rng, B=2, S=24)
+    logits, _ = model_lib.forward(params, cfg, batch, remat="none")
+    assert logits.shape[1] == batch["tokens"].shape[1]
+
+
+def test_remat_consistency(rng):
+    """remat=full/none must give identical losses (same math)."""
+    cfg = reduced_config("granite-8b")
+    params = _params(cfg)
+    batch = _batch(cfg, rng)
+    l_none = model_lib.loss_fn(params, cfg, batch, remat="none")[0]
+    l_full = model_lib.loss_fn(params, cfg, batch, remat="full")[0]
+    np.testing.assert_allclose(float(l_none), float(l_full), rtol=1e-5)
+
+
+def test_window_attention_limits_context(rng):
+    """llama4-style local layers: tokens beyond the window must not
+    influence the output (checked via the config's kv_cache_len)."""
+    cfg = reduced_config("llama4-scout-17b-a16e")
+    assert cfg.attn_window == 16
+    # local layer capacity == window; global layer capacity == seq
+    assert cfg.kv_cache_len(0, 64) == 16       # local layer
+    g = cfg.global_attn_every - 1
+    assert cfg.kv_cache_len(g, 64) == 64       # global layer

@@ -1,0 +1,244 @@
+"""Multi-device semantics tests. Each test runs in a SUBPROCESS with
+xla_force_host_platform_device_count set (the main pytest process must
+keep seeing 1 device), asserting:
+
+  * EP (all-to-all) MoE dispatch == dense reference dispatch
+  * int8-compressed cross-pod psum ≈ exact mean (unbiased, bounded err)
+  * sharded train step == single-device train step (bitwise-ish)
+  * elastic checkpoint restore onto a different mesh preserves values
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, n_dev: int = 8):
+    src = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", src], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_moe_ep_matches_dense():
+    run_sub("""
+        from repro.configs import reduced_config
+        from repro.models import moe as moe_mod
+        from repro.models.param import materialize
+        import dataclasses
+        cfg = reduced_config("llama4-scout-17b-a16e")
+        # capacity high enough that no tokens drop in either path
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, n_experts=4, capacity_factor=8.0))
+        p = materialize(moe_mod.init_moe(cfg), jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model),
+                              jnp.float32)
+        y_dense, aux_d = moe_mod.moe_forward_dense(p, cfg, x)
+        with jax.set_mesh(mesh):
+            xs = jax.device_put(x, NamedSharding(mesh, P("data")))
+            ps = jax.tree.map(lambda a: jax.device_put(a, NamedSharding(
+                mesh, P())), p)
+            ps["gate"] = jax.device_put(p["gate"], NamedSharding(
+                mesh, P("data", None, "model")))
+            ps["up"] = jax.device_put(p["up"], NamedSharding(
+                mesh, P("data", None, "model")))
+            ps["down"] = jax.device_put(p["down"], NamedSharding(
+                mesh, P("data", "model", None)))
+            y_ep, aux_e = jax.jit(
+                lambda p_, x_: moe_mod.moe_forward_ep(p_, cfg, x_, mesh)
+            )(ps, xs)
+        err = float(jnp.max(jnp.abs(y_ep - y_dense)))
+        aerr = abs(float(aux_e) - float(aux_d))
+        assert err < 1e-4, ("EP mismatch", err)
+        # aux is a LOCAL load-balance estimate under EP (mean of per-shard
+        # f·P products) — close to, but not equal to, the global estimate
+        assert aerr < 0.1, ("aux mismatch", aerr)
+        print("EP OK", err)
+    """)
+
+
+def test_compressed_psum_unbiased():
+    run_sub("""
+        from repro.parallel.collectives import compressed_psum
+        mesh = jax.make_mesh((8,), ("pod",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 256), jnp.float32)
+        def body(gl):
+            key = jax.random.PRNGKey(3)
+            return compressed_psum(gl, ("pod",), key)
+        out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("pod"),
+                      out_specs=P("pod"), check_vma=False))(g)
+        exact = jnp.mean(g, axis=0, keepdims=True)
+        # every shard holds the same mean estimate; error bounded by the
+        # quantization step (amax/127)
+        step = float(jnp.max(jnp.abs(g))) / 127.0
+        err = float(jnp.max(jnp.abs(out[0:1] - exact)))
+        assert err <= step, (err, step)
+        print("compressed psum OK", err, step)
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    run_sub("""
+        from repro.configs import reduced_config
+        from repro.models import model as model_lib
+        from repro.models.param import materialize, axes_tree
+        from repro.parallel.sharding import rules_for
+        from repro.train.optimizer import OptimizerConfig
+        from repro.train.train_step import (make_train_step,
+            init_train_state, state_shardings)
+        from repro.data.pipeline import SyntheticTokenPipeline
+
+        cfg = reduced_config("granite-8b")
+        opt = OptimizerConfig(lr=1e-3)
+        pipe = SyntheticTokenPipeline(cfg.vocab_size, 32, 8, seed=1)
+        batch = pipe.jax_batch_at(0)
+
+        # single-device ground truth
+        mesh1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                     ("data", "model"))
+        rules = rules_for(cfg, "train")
+        params = materialize(model_lib.init_model(cfg),
+                             jax.random.PRNGKey(0))
+        st0 = init_train_state(params, opt, jax.random.PRNGKey(0))
+        f1 = make_train_step(cfg, opt, mesh1, rules, remat="none")
+        with jax.set_mesh(mesh1):
+            st1, m1 = jax.jit(f1)(st0, batch)
+
+        # 4x2 sharded
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        ptree = model_lib.init_model(cfg)
+        sh = state_shardings(ptree, rules, mesh)
+        stS = jax.device_put(st0, sh)
+        fS = make_train_step(cfg, opt, mesh, rules, remat="none")
+        with jax.set_mesh(mesh):
+            st2, m2 = jax.jit(fS)(stS, batch)
+        d_loss = abs(float(m1["loss"]) - float(m2["loss"]))
+        assert d_loss < 1e-4, d_loss
+        l1 = jax.tree.leaves(st1.params)
+        l2 = jax.tree.leaves(st2.params)
+        errs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                np.asarray(b, np.float32)))) for a, b in zip(l1, l2)]
+        assert max(errs) < 2e-2, max(errs)
+        print("sharded step OK", d_loss, max(errs))
+    """)
+
+
+def test_elastic_restore_across_meshes():
+    run_sub("""
+        import tempfile
+        from repro.checkpoint.manager import CheckpointManager
+        tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 8))}
+        d = tempfile.mkdtemp()
+        mgr = CheckpointManager(d, async_mode=False)
+
+        mesh4 = jax.make_mesh((4,), ("data",))
+        t4 = jax.device_put(tree, NamedSharding(mesh4, P("data")))
+        mgr.save(1, t4)
+
+        mesh8 = jax.make_mesh((8,), ("data",))
+        tgt = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype),
+                           tree)
+        out = mgr.restore(1, tgt, jax.tree.map(
+            lambda _: NamedSharding(mesh8, P("data")), tree))
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(tree["w"]))
+        assert len(out["w"].sharding.device_set) == 8
+        print("elastic restore OK")
+    """)
+
+
+def test_int8_compressed_train_step_close_to_exact():
+    run_sub("""
+        from repro.configs import reduced_config
+        from repro.models import model as model_lib
+        from repro.models.param import materialize
+        from repro.parallel.sharding import rules_for
+        from repro.train.optimizer import OptimizerConfig
+        from repro.train.train_step import (make_train_step,
+            init_train_state, state_shardings)
+        from repro.data.pipeline import SyntheticTokenPipeline
+
+        cfg = reduced_config("qwen2-1.5b")
+        opt = OptimizerConfig(lr=1e-3)
+        pipe = SyntheticTokenPipeline(cfg.vocab_size, 32, 8, seed=1)
+        batch = pipe.jax_batch_at(0)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        # int8 compression composes with the TP ("base") preset; FSDP's
+        # weight all-gather and zero3's batch-over-model sharding both trip
+        # an XLA subgroup-manual partitioner check (upstream limitation) —
+        # see make_train_step's guard
+        from repro.parallel.sharding import preset
+        rules = preset("base")
+        params = materialize(model_lib.init_model(cfg),
+                             jax.random.PRNGKey(0))
+        st0 = init_train_state(params, opt, jax.random.PRNGKey(0))
+        ptree = model_lib.init_model(cfg)
+        sh = state_shardings(ptree, rules, mesh)
+        st0 = jax.device_put(st0, sh)
+
+        f_exact = make_train_step(cfg, opt, mesh, rules, remat="none")
+        f_comp = make_train_step(cfg, opt, mesh, rules, remat="none",
+                                 grad_compression="int8")
+        with jax.set_mesh(mesh):
+            st1, m1 = jax.jit(f_exact)(st0, batch)
+            st2, m2 = jax.jit(f_comp)(st0, batch)
+        d = abs(float(m1["loss"]) - float(m2["loss"]))
+        assert d < 1e-5, d  # loss computed pre-update: must agree
+        # updates differ only by quantization noise
+        errs = [float(jnp.max(jnp.abs(np.asarray(a, np.float32) -
+                np.asarray(b, np.float32))))
+                for a, b in zip(jax.tree.leaves(st1.params),
+                                jax.tree.leaves(st2.params))]
+        assert max(errs) < 5e-2, max(errs)
+        print("int8 compressed step OK", max(errs))
+    """)
+
+
+def test_sequence_parallel_attention_matches_single_device():
+    """Archs whose head count does not divide the TP axis route attention
+    through the shard_map sequence-parallel path — must be numerically
+    identical to the unsharded computation."""
+    run_sub("""
+        import dataclasses
+        from repro.configs import reduced_config
+        from repro.models import model as model_lib
+        from repro.models.param import materialize
+        from repro.parallel.sharding import rules_for, constrainer
+        from repro.data.pipeline import SyntheticTokenPipeline
+
+        cfg = reduced_config("granite-8b")
+        cfg = dataclasses.replace(cfg, n_heads=6, n_kv_heads=2, d_head=16)
+        assert cfg.n_heads % 4 != 0  # will not divide model=4
+        params = materialize(model_lib.init_model(cfg),
+                             jax.random.PRNGKey(0))
+        pipe = SyntheticTokenPipeline(cfg.vocab_size, 32, 8, seed=1)
+        batch = pipe.jax_batch_at(0)
+
+        loss_ref, _ = model_lib.loss_fn(params, cfg, batch, remat="none")
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = rules_for(cfg, "train")
+        constrain = constrainer(rules, mesh)
+        with jax.set_mesh(mesh):
+            loss_sp, _ = jax.jit(
+                lambda p, b: model_lib.loss_fn(
+                    p, cfg, b, mesh=mesh, constrain=constrain,
+                    remat="none")
+            )(params, batch)
+        d = abs(float(loss_ref) - float(loss_sp))
+        assert d < 1e-4, d
+        print("SP attention OK", d)
+    """)
