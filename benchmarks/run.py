@@ -13,15 +13,16 @@ import time
 
 def main():
     from benchmarks import (
-        bench_grouping, bench_kernels, bench_preemption, bench_scaledown,
-        bench_stragglers, bench_tracking, bench_utilization,
+        bench_federation, bench_grouping, bench_kernels, bench_preemption,
+        bench_scaledown, bench_stragglers, bench_tracking,
+        bench_utilization,
     )
 
     t0 = time.time()
     failures = []
     for mod in (bench_tracking, bench_grouping, bench_preemption,
                 bench_scaledown, bench_stragglers, bench_utilization,
-                bench_kernels):
+                bench_federation, bench_kernels):
         name = mod.__name__.split(".")[-1]
         t = time.time()
         try:

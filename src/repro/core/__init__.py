@@ -6,9 +6,16 @@ from repro.core.jobqueue import Job, JobQueue, JobState
 from repro.core.cluster import KubeCluster, Node, Pod, PodPhase
 from repro.core.worker import Collector, Worker, advance_workers, kill_worker
 from repro.core.groups import GroupSignature, group_jobs, signature_of
-from repro.core.config import ProvisionerConfig, load_ini, PAPER_EXAMPLE_INI
+from repro.core.config import (
+    BackendConfig, ProvisionerConfig, dump_ini, load_ini, PAPER_EXAMPLE_INI,
+)
+from repro.core.backend import (
+    FederatedClusterView, KubeBackend, PodSpec, ROUTING_POLICIES,
+    RoutingPolicy, ScalingBackend, adapt_single_cluster, backend_from_config,
+    build_backends, make_routing_policy,
+)
 from repro.core.provisioner import Provisioner
 from repro.core.nodescaler import NodeAutoscaler, NodeTemplate
 from repro.core.simulation import Simulation, gpu_job, onprem_nodes
-from repro.core.metrics import Recorder
+from repro.core.metrics import Recorder, summarize_backends
 from repro.core.stragglers import StragglerPolicy

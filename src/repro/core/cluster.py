@@ -85,7 +85,8 @@ class Pod:
 
 class KubeCluster:
     def __init__(self, nodes: list[Node] | None = None, *,
-                 enable_preemption: bool = True):
+                 enable_preemption: bool = True, name: str = "default"):
+        self.name = name                    # owning backend (federation)
         self.nodes: dict[str, Node] = {n.name: n for n in (nodes or [])}
         self.pods: dict[str, Pod] = {}
         self.enable_preemption = enable_preemption
@@ -265,3 +266,22 @@ class KubeCluster:
             n.busy_integral.get(resource, 0) for n in self.nodes.values()
         )
         return busy / cap if cap > 0 else 0.0
+
+    def resource_seconds(self, resource: str = "gpu") -> tuple[float, float]:
+        """(provisioned, busy) resource-seconds — the per-backend harvested
+        compute split (Fig 2 analogue per provider)."""
+        cap = sum(n.capacity.get(resource, 0) * n.alive_s
+                  for n in self.nodes.values())
+        busy = sum(n.busy_integral.get(resource, 0)
+                   for n in self.nodes.values())
+        return cap, busy
+
+    def count_pods(self, **labels: str) -> int:
+        """Live pods matching every given label (backend attribution)."""
+        n = 0
+        for p in self.pods.values():
+            if p.phase not in (PodPhase.PENDING, PodPhase.RUNNING):
+                continue
+            if all(p.labels.get(k) == v for k, v in labels.items()):
+                n += 1
+        return n

@@ -24,6 +24,21 @@ class Recorder:
         for key, val in gauges.items():
             self.series.setdefault(key, []).append((now, float(val)))
 
+    # -- per-backend series (federation) -----------------------------------
+    def record_backend(self, now: float, backend: str, **gauges: float):
+        """Record gauges attributed to one scaling backend; stored under
+        ``key@backend`` so aggregate keys stay untouched."""
+        for key, val in gauges.items():
+            self.series.setdefault(f"{key}@{backend}", []).append(
+                (now, float(val)))
+
+    def backend_values(self, key: str, backend: str) -> list[float]:
+        return self.values(f"{key}@{backend}")
+
+    def backends_recorded(self) -> list[str]:
+        return sorted({k.split("@", 1)[1] for k in self.series
+                       if "@" in k})
+
     def values(self, key: str) -> list[float]:
         return [v for _, v in self.series.get(key, [])]
 
@@ -92,6 +107,28 @@ def summarize_jobs(completed: list, now: float) -> dict[str, Any]:
         "goodput": done_work / (done_work + wasted)
         if done_work + wasted > 0 else 1.0,
     }
+
+
+def summarize_backends(backends: list) -> dict[str, dict[str, Any]]:
+    """Per-backend attribution: pods submitted/reclaimed, integrated cost,
+    deprovisioning waste (Fig 3; definitionally 0 for a static pool), and
+    harvested GPU-seconds (Fig 2 split per provider)."""
+    out: dict[str, dict[str, Any]] = {}
+    for b in backends:
+        cap_s, busy_s = b.cluster.resource_seconds("gpu")
+        out[b.name] = {
+            "pods_submitted": b.stats.pods_submitted,
+            "pods_reclaimed": b.stats.pods_reclaimed,
+            "cost": b.stats.cost_total,
+            "waste_fraction": (b.autoscaler.waste_fraction()
+                               if b.autoscaler is not None else 0.0),
+            "gpu_utilization": b.cluster.utilization("gpu"),
+            "gpu_seconds_provisioned": cap_s,
+            "gpu_seconds_busy": busy_s,
+            "live_nodes": len(b.cluster.nodes),
+            "spot": b.spot,
+        }
+    return out
 
 
 def summarize_workers(workers: list) -> dict[str, Any]:

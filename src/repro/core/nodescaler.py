@@ -55,8 +55,32 @@ class NodeAutoscaler:
                 n = min(n, cap.get(k, 0) // v)
         return int(n) if n != float("inf") else 0
 
+    @staticmethod
+    def _placeable(pod, node: Node) -> bool:
+        """Could the scheduler ever put this pod on this node (taints +
+        selector, capacity aside)?"""
+        for taint in node.taints:
+            if taint not in pod.tolerations:
+                return False
+        for k, want in pod.node_selector.items():
+            have = node.labels.get(k)
+            if isinstance(want, (list, tuple, set)):
+                if have not in want:
+                    return False
+            elif have != want:
+                return False
+        return True
+
     def _nodes_needed(self) -> int:
-        """Bin-pack pending pods into node templates (first-fit by count)."""
+        """Bin-pack pending pods into node templates (first-fit by count).
+
+        Free capacity on already-live nodes is seeded as pre-existing bins
+        so a tick where the scheduler hasn't yet placed freshly-submitted
+        pods does NOT boot spurious nodes — only pods that overflow the
+        pool's current allocatable headroom count toward new nodes.  A
+        seeded bin only absorbs pods the scheduler could actually place
+        there (taints/selector respected), so a pod blocked from live
+        nodes by affinity still drives a scale-up."""
         pending = self.cluster.pending_pods(
             lambda p: all(
                 self.template.capacity.get(k, 0) >= v
@@ -65,25 +89,40 @@ class NodeAutoscaler:
         )
         if not pending:
             return 0
+        # pre-existing bins: current allocatable headroom of live nodes
+        seeded: list[tuple[dict[str, float], Node]] = []
+        for name, node in self.cluster.nodes.items():
+            seeded.append((dict(node.allocatable(
+                (), used=self.cluster.node_used(name))), node))
+        new_bins: list[dict[str, float]] = []
         # greedy first-fit-decreasing over the dominant resource
-        bins: list[dict[str, float]] = []
         for pod in sorted(
             pending,
             key=lambda p: -max(p.request.values() or [0]),
         ):
             placed = False
-            for b in bins:
-                if all(b.get(k, 0) >= v for k, v in pod.request.items()):
+            for b, node in seeded:
+                if (self._placeable(pod, node)
+                        and all(b.get(k, 0) >= v
+                                for k, v in pod.request.items())):
                     for k, v in pod.request.items():
                         b[k] = b.get(k, 0) - v
                     placed = True
                     break
             if not placed:
+                for b in new_bins:
+                    if all(b.get(k, 0) >= v
+                           for k, v in pod.request.items()):
+                        for k, v in pod.request.items():
+                            b[k] = b.get(k, 0) - v
+                        placed = True
+                        break
+            if not placed:
                 b = dict(self.template.capacity)
                 for k, v in pod.request.items():
                     b[k] = b.get(k, 0) - v
-                bins.append(b)
-        return len(bins)
+                new_bins.append(b)
+        return len(new_bins)
 
     # -- tick --------------------------------------------------------------------
     def tick(self, now: float, dt: float):

@@ -6,7 +6,8 @@ Reconciliation loop (C1), run every ``submit_interval_s``:
   2. group them by requirement signature (C4)
   3. per group:  deficit = n_idle − (pending pods of the group
                                      + unclaimed ready workers of the group)
-  4. submit ``min(deficit, limits)`` pods whose requests equal the
+  4. split ``min(deficit, limits)`` across the scaling backends via the
+     configured RoutingPolicy; submit pods whose requests equal the
      signature and whose START expression is the pushed-down filter
 
 Scale-down is NOT here: workers self-terminate when idle (C2, worker.py),
@@ -16,20 +17,29 @@ default — HTCondor demand is bursty and a pending pod is free; an optional
 ``cancel_stale_pending_s`` reaps pods pending longer than the horizon
 (useful with the node autoscaler off).
 
+Federation (backend API): the provisioner holds an ordered list of
+`ScalingBackend`s (see core/backend.py) instead of one hard-wired
+`KubeCluster`; passing a bare `KubeCluster` still works and becomes the
+single default backend — the paper's original deployment shape.
+
 Anti-affinity convention from the paper's INI (config.py): node_affinity
 keys starting with ^ must NOT match.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from typing import Any, Callable
 
-from repro.core.classad import ClassAdExpr
-from repro.core.cluster import KubeCluster, Pod, PodPhase
+from repro.core.backend import (
+    KubeBackend, PodSpec, RoutingPolicy, adapt_single_cluster,
+    make_routing_policy,
+)
+from repro.core.cluster import KubeCluster, Pod
 from repro.core.config import ProvisionerConfig
 from repro.core.groups import (
-    GroupSignature, group_jobs, matches_signature, signature_of,
+    GroupSignature, group_jobs, matches_signature,
 )
 from repro.core.jobqueue import JobQueue
 from repro.core.worker import Collector, Worker
@@ -40,27 +50,36 @@ class ProvisionStats:
     submitted: int = 0
     reaped_pending: int = 0
     per_group_submitted: dict = dataclasses.field(default_factory=dict)
+    per_backend_submitted: dict = dataclasses.field(default_factory=dict)
 
 
 class Provisioner:
-    """One instance per (HTCondor pool, Kubernetes namespace) pair — the
-    paper's operation mode (a); mode (b) layers a dedicated local pool in
-    front (see examples/grid_portal.py)."""
+    """One instance per HTCondor pool; federates any number of resource
+    providers — the paper's operation mode (a); mode (b) layers a dedicated
+    local pool in front (see examples/grid_portal.py)."""
 
     def __init__(
         self,
         cfg: ProvisionerConfig,
         queue: JobQueue,
         collector: Collector,
-        cluster: KubeCluster,
+        backends: KubeCluster | list | tuple,
         *,
+        routing: RoutingPolicy | None = None,
         cancel_stale_pending_s: float | None = None,
         worker_factory: Callable[..., Worker] | None = None,
     ):
         self.cfg = cfg
         self.queue = queue
         self.collector = collector
-        self.cluster = cluster
+        if isinstance(backends, KubeCluster):
+            backends = [adapt_single_cluster(backends)]
+        elif not isinstance(backends, (list, tuple)):
+            backends = [backends]          # a single ScalingBackend
+        self.backends = list(backends)
+        if not self.backends:
+            raise ValueError("Provisioner needs at least one backend")
+        self.routing = routing or make_routing_policy(cfg.routing_policy)
         self.filter = cfg.filter_expr()
         self.start_expr = cfg.start_expr()
         self.cancel_stale_pending_s = cancel_stale_pending_s
@@ -69,14 +88,26 @@ class Provisioner:
         self._last_run = -1e18
         self.stats = ProvisionStats()
 
+    @property
+    def cluster(self) -> KubeCluster:
+        """Primary backend's placement surface (single-backend compat)."""
+        return self.backends[0].cluster
+
+    def backend(self, name: str):
+        for b in self.backends:
+            if b.name == name:
+                return b
+        raise KeyError(name)
+
     # -- helpers --------------------------------------------------------------
     def _pod_group_label(self, sig: GroupSignature) -> str:
-        return f"grp-{abs(hash(sig)) % 10**10:010d}"
+        # stable across processes/restarts (builtin hash() is salted by
+        # PYTHONHASHSEED and would orphan pending-pod counts on restart)
+        payload = repr(dataclasses.astuple(sig)).encode()
+        return f"grp-{hashlib.sha1(payload).hexdigest()[:10]}"
 
     def _group_pending(self, label: str) -> int:
-        return len(self.cluster.pending_pods(
-            lambda p: p.labels.get("provision-group") == label
-        ))
+        return sum(b.pending(label) for b in self.backends)
 
     def _group_unclaimed(self, sig: GroupSignature) -> int:
         return self.collector.unclaimed_capacity(
@@ -84,11 +115,7 @@ class Provisioner:
         )
 
     def _total_live_pods(self) -> int:
-        return len([
-            p for p in self.cluster.pods.values()
-            if p.phase in (PodPhase.PENDING, PodPhase.RUNNING)
-            and p.labels.get("owner") == "prp-provisioner"
-        ])
+        return sum(b.live_pods() for b in self.backends)
 
     # -- the loop body ----------------------------------------------------------
     def reconcile(self, now: float) -> ProvisionStats:
@@ -111,22 +138,36 @@ class Provisioner:
             room_group = self.cfg.max_pods_per_group - pending
             room_total = self.cfg.max_total_pods - self._total_live_pods()
             n = max(0, min(deficit, room_group, room_total))
-            for _ in range(n):
-                self._submit_pod(sig, label, now)
-            if n:
-                stats.submitted += n
-                stats.per_group_submitted[sig] = n
+            if n <= 0:
+                continue
+            alloc = self.routing.split(
+                n, sig.as_pod_request(), self.backends, now)
+            submitted = 0
+            for backend, k in alloc:
+                for _ in range(k):
+                    self._submit_pod(sig, label, now, backend)
+                submitted += k
+                stats.per_backend_submitted[backend.name] = (
+                    stats.per_backend_submitted.get(backend.name, 0) + k)
+            if submitted:
+                stats.submitted += submitted
+                stats.per_group_submitted[sig] = submitted
 
         if self.cancel_stale_pending_s is not None:
-            for pod in self.cluster.pending_pods(
-                lambda p: p.labels.get("owner") == "prp-provisioner"
-            ):
-                if now - pod.created_at > self.cancel_stale_pending_s:
-                    self.cluster.delete_pod(pod.name, now, "stale_pending")
-                    stats.reaped_pending += 1
+            for backend in self.backends:
+                for pod in backend.cluster.pending_pods(
+                    lambda p: p.labels.get("owner") == "prp-provisioner"
+                ):
+                    if now - pod.created_at > self.cancel_stale_pending_s:
+                        backend.cluster.delete_pod(
+                            pod.name, now, "stale_pending")
+                        stats.reaped_pending += 1
 
         self.stats.submitted += stats.submitted
         self.stats.reaped_pending += stats.reaped_pending
+        for name, k in stats.per_backend_submitted.items():
+            self.stats.per_backend_submitted[name] = (
+                self.stats.per_backend_submitted.get(name, 0) + k)
         return stats
 
     def maybe_reconcile(self, now: float) -> ProvisionStats | None:
@@ -136,7 +177,9 @@ class Provisioner:
         return None
 
     # -- pod/worker wiring --------------------------------------------------------
-    def _submit_pod(self, sig: GroupSignature, label: str, now: float):
+    def _submit_pod(self, sig: GroupSignature, label: str, now: float,
+                    backend=None):
+        backend = backend or self.backends[0]
         name = f"htc-exec-{next(self._ids)}"
         worker_ad = sig.as_worker_ad()
         worker_ad.update(self.cfg.envs)  # advertised extra attrs (Fig 1)
@@ -167,18 +210,18 @@ class Provisioner:
                 anti[k[1:]] = v
             else:
                 selector[k] = v
-        pod = Pod(
+        spec = PodSpec(
             name=name,
             request=sig.as_pod_request(),
             priority_class=self.cfg.priority_class,
             tolerations=self.cfg.tolerations,
             node_selector=selector,
+            anti_affinity=anti,
             labels={
                 "owner": "prp-provisioner",
                 "provision-group": label,
-                **({"anti-affinity": ",".join(anti)} if anti else {}),
             },
             on_start=on_start,
             on_stop=on_stop,
         )
-        self.cluster.create_pod(pod, now)
+        backend.submit(spec, now)

@@ -1,16 +1,24 @@
 """Discrete-time simulation harness wiring all control-plane components.
 
-One `Simulation` owns: JobQueue (schedd), Collector (pool), KubeCluster,
-Provisioner, optional NodeAutoscaler, optional fault injectors, and a
-Recorder.  `run(until)` advances in fixed ticks; each tick:
+One `Simulation` owns: JobQueue (schedd), Collector (pool), N
+`ScalingBackend`s (each a KubeCluster + optional NodeAutoscaler + cost
+model), Provisioner, optional fault injectors, and a Recorder.
+`run(until)` advances in fixed ticks; each tick:
 
   1. external events (job arrivals, spot reclaims) fire
   2. provisioner reconciles (at its own interval)  — C1/C3/C4
-  3. node autoscaler ticks                          — C7
-  4. kube scheduler places pods (priorities/preemption) — §5
-  5. negotiator matches idle jobs to ready workers
-  6. workers advance claimed jobs; self-terminate when idle — C2
-  7. metrics are recorded
+  3. each backend ticks: node autoscaler (C7), kube scheduler
+     (priorities/preemption, §5), cost accounting
+  4. negotiator matches idle jobs to ready workers
+  5. workers advance claimed jobs; self-terminate when idle — C2
+  6. metrics are recorded (aggregate + per-backend series)
+
+Single-backend compatibility: the seed constructor signature
+(`nodes=`, `node_template=`, `max_nodes=`) still works — it is adapted
+into a one-element backend list, and `sim.cluster` / `sim.autoscaler`
+keep pointing at that backend's internals.  Multi-provider federations
+pass `backends=[...]` or use `Simulation.from_config` with a config
+declaring `[backend:<name>]` sections.
 
 The same Provisioner/Worker code runs under wall-clock in the examples
 (launch/train.py elastic mode) — the simulator only replaces the clock and
@@ -24,14 +32,19 @@ from typing import Any, Callable, Iterable
 
 import numpy as np
 
-from repro.core.cluster import KubeCluster, Node, PodPhase
+from repro.core.backend import (
+    FederatedClusterView, KubeBackend, build_backends,
+)
+from repro.core.cluster import KubeCluster, Node
 from repro.core.config import ProvisionerConfig
 from repro.core.jobqueue import Job, JobQueue
-from repro.core.metrics import Recorder, summarize_jobs, summarize_workers
+from repro.core.metrics import (
+    Recorder, summarize_backends, summarize_jobs, summarize_workers,
+)
 from repro.core.nodescaler import NodeAutoscaler, NodeTemplate
 from repro.core.provisioner import Provisioner
 from repro.core.stragglers import StragglerPolicy
-from repro.core.worker import Collector, advance_workers, kill_worker
+from repro.core.worker import Collector, advance_workers
 
 
 @dataclasses.dataclass
@@ -49,6 +62,7 @@ class Simulation:
         nodes: list[Node] | None = None,
         node_template: NodeTemplate | None = None,
         max_nodes: int = 64,
+        backends: list | None = None,
         tick_s: float = 5.0,
         negotiate_interval_s: float = 15.0,
         seed: int = 0,
@@ -59,13 +73,20 @@ class Simulation:
         self.negotiate_interval_s = negotiate_interval_s
         self.queue = JobQueue()
         self.collector = Collector()
-        self.cluster = KubeCluster(nodes or [])
+        if backends is None:
+            # single-backend compatibility adapter (seed signature)
+            cluster = KubeCluster(nodes or [])
+            autoscaler = (
+                NodeAutoscaler(cluster, node_template, max_nodes=max_nodes)
+                if node_template is not None else None
+            )
+            backends = [KubeBackend("default", cluster, autoscaler)]
+        self.backends = list(backends)
+        self.cluster = self.backends[0].cluster
+        self.autoscaler = self.backends[0].autoscaler
+        self.cluster_view = FederatedClusterView(self.backends)
         self.provisioner = Provisioner(
-            cfg, self.queue, self.collector, self.cluster
-        )
-        self.autoscaler = (
-            NodeAutoscaler(self.cluster, node_template, max_nodes=max_nodes)
-            if node_template is not None else None
+            cfg, self.queue, self.collector, self.backends
         )
         self.straggler_policy = straggler_policy
         self.recorder = Recorder()
@@ -86,6 +107,17 @@ class Simulation:
 
         self.provisioner.worker_factory = tracking_factory
 
+    @classmethod
+    def from_config(cls, cfg: ProvisionerConfig, **kw) -> "Simulation":
+        """Build the federation declared by `[backend:<name>]` sections;
+        falls back to the single-backend constructor when none exist."""
+        if cfg.backends and "backends" not in kw:
+            kw["backends"] = build_backends(cfg)
+        return cls(cfg, **kw)
+
+    def backend(self, name: str):
+        return self.provisioner.backend(name)
+
     # -- event helpers -------------------------------------------------------
     def at(self, t: float, fn: Callable[["Simulation", float], None],
            name: str = ""):
@@ -100,15 +132,18 @@ class Simulation:
 
         self.at(t, fire, name=f"submit x{len(jobs)}")
 
-    def inject_node_failure(self, t: float, node_name: str | None = None):
+    def inject_node_failure(self, t: float, node_name: str | None = None,
+                            backend: str | None = None):
         def fire(sim: "Simulation", now: float):
-            names = list(sim.cluster.nodes)
+            cluster = (sim.backend(backend).cluster if backend is not None
+                       else sim.cluster)
+            names = list(cluster.nodes)
             if not names:
                 return
             target = node_name or names[
                 int(sim.rng.integers(0, len(names)))
             ]
-            sim.cluster.fail_node(target, now)
+            cluster.fail_node(target, now)
 
         self.at(t, fire, name="node_failure")
 
@@ -126,17 +161,26 @@ class Simulation:
 
         self.at(t, fire, name="slow_workers")
 
-    def inject_pod_preemption(self, t: float, frac: float = 0.5):
-        """Spot-style reclaim of a fraction of running provisioner pods."""
+    def inject_pod_preemption(self, t: float, frac: float = 0.5,
+                              backend: str | None = None):
+        """Spot-style reclaim of a fraction of running provisioner pods —
+        across the whole federation, or on one named backend."""
 
         def fire(sim: "Simulation", now: float):
-            pods = sim.cluster.running_pods(
+            if backend is not None:
+                sim.backend(backend).reclaim(frac, now, sim.rng)
+                return
+            pods = sim.cluster_view.running_pods(
                 lambda p: p.labels.get("owner") == "prp-provisioner"
             )
             k = max(1, int(len(pods) * frac)) if pods else 0
             idx = sim.rng.permutation(len(pods))[:k]
+            by_name = {b.name: b for b in sim.backends}
             for i in idx:
-                sim.cluster.delete_pod(pods[i].name, now, "preempted")
+                owner = by_name.get(pods[i].labels.get("backend", ""))
+                sim.cluster_view.delete_pod(pods[i].name, now, "preempted")
+                if owner is not None:
+                    owner.stats.pods_reclaimed += 1
 
         self.at(t, fire, name="pod_preemption")
 
@@ -153,40 +197,47 @@ class Simulation:
         # 2. provisioner
         self.provisioner.maybe_reconcile(now)
 
-        # 3. node autoscaler
-        if self.autoscaler is not None:
-            self.autoscaler.tick(now, dt)
+        # 3. backends: autoscale, schedule, account (C7 + §5)
+        for backend in self.backends:
+            backend.tick(now, dt)
 
-        # 4. kube scheduling + accounting
-        self.cluster.schedule(now)
-        self.cluster.tick_accounting(dt)
-
-        # 5. negotiation
+        # 4. negotiation
         if now - self._last_negotiate >= self.negotiate_interval_s:
             self.collector.negotiate(self.queue, now)
             self._last_negotiate = now
 
-        # 6. workers advance
-        advance_workers(self.collector, self.queue, self.cluster, now, dt)
+        # 5. workers advance
+        advance_workers(self.collector, self.queue, self.cluster_view,
+                        now, dt)
 
-        # 6b. straggler mitigation (beyond-paper; see core/stragglers.py)
+        # 5b. straggler mitigation (beyond-paper; see core/stragglers.py)
         if self.straggler_policy is not None:
             self.straggler_policy.tick(self.queue, self.collector,
-                                       self.cluster, now)
+                                       self.cluster_view, now)
 
-        # 7. metrics
+        # 6. metrics
         self.recorder.record(
             now,
             idle_jobs=self.queue.n_idle(),
             running_jobs=self.queue.n_running(),
-            pending_pods=len(self.cluster.pending_pods()),
-            running_pods=len(self.cluster.running_pods()),
+            pending_pods=len(self.cluster_view.pending_pods()),
+            running_pods=len(self.cluster_view.running_pods()),
             ready_workers=len(self.collector.alive_workers(now)),
             busy_workers=sum(
                 1 for w in self.collector.workers.values() if w.claimed
             ),
-            live_nodes=len(self.cluster.nodes),
+            live_nodes=sum(len(b.cluster.nodes) for b in self.backends),
+            cost_rate=sum(b.cost_rate() for b in self.backends),
         )
+        if len(self.backends) > 1:
+            for b in self.backends:
+                self.recorder.record_backend(
+                    now, b.name,
+                    pending_pods=b.pending(None),
+                    live_pods=b.live_pods(),
+                    live_nodes=len(b.cluster.nodes),
+                    cost_rate=b.cost_rate(),
+                )
         self.now += dt
 
     def run(self, until: float):
@@ -210,7 +261,14 @@ class Simulation:
                 "deprovisioned": self.autoscaler.deprovisioned_total,
                 "waste_fraction": self.autoscaler.waste_fraction(),
             }
-        out["gpu_utilization"] = self.cluster.utilization("gpu")
+        cap = busy = 0.0
+        for b in self.backends:
+            c, u = b.cluster.resource_seconds("gpu")
+            cap += c
+            busy += u
+        out["gpu_utilization"] = busy / cap if cap > 0 else 0.0
+        out["cost_total"] = sum(b.stats.cost_total for b in self.backends)
+        out["backends"] = summarize_backends(self.backends)
         return out
 
 

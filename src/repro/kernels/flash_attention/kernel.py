@@ -32,6 +32,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x;
+# accept either so the kernels run on both sides of the rename
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 NEG_INF = -1e30
 
 DEFAULT_BQ = 128
@@ -187,7 +192,7 @@ def flash_attention_pallas(
             pltpu.VMEM((BQ * G, 1), jnp.float32),
             pltpu.VMEM((BQ * G, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

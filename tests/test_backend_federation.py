@@ -1,0 +1,382 @@
+"""Backend-federation API: routing policies, `[backend:*]` INI parsing,
+per-backend stats attribution, the single-backend compatibility adapter,
+and the node-autoscaler headroom fix."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import (
+    BackendConfig, KubeBackend, KubeCluster, Node, NodeAutoscaler,
+    NodeTemplate, Pod, Provisioner, ProvisionerConfig, Simulation,
+    build_backends, dump_ini, gpu_job, load_ini, make_routing_policy,
+    onprem_nodes,
+)
+from repro.core.groups import GroupSignature
+
+GPU1 = {"cpu": 1.0, "gpu": 1.0, "memory": 4.0, "disk": 8.0}
+
+
+def static_backend(name, n_nodes=2, gpus=8, **kw):
+    cluster = KubeCluster(
+        onprem_nodes(n_nodes, gpus=gpus, prefix=name), name=name)
+    return KubeBackend(name, cluster, **kw)
+
+
+def elastic_backend(name, *, gpus=7, max_nodes=8, hourly=2.5, spot=False,
+                    **kw):
+    cluster = KubeCluster([], name=name)
+    tmpl = NodeTemplate(
+        capacity={"cpu": 64, "gpu": gpus, "memory": 512, "disk": 1024},
+        provision_delay_s=60, scale_down_delay_s=120, hourly_cost=hourly)
+    scaler = NodeAutoscaler(cluster, tmpl, max_nodes=max_nodes,
+                            prefix=f"{name}-np")
+    return KubeBackend(name, cluster, scaler, spot=spot, **kw)
+
+
+def alloc_map(alloc):
+    return {b.name: k for b, k in alloc}
+
+
+# ---------------------------------------------------------------------------
+# Routing policies
+# ---------------------------------------------------------------------------
+
+def test_fill_first_respects_declaration_order():
+    onprem = static_backend("onprem", n_nodes=2, gpus=8)   # 16 slots
+    cloud = elastic_backend("cloud")
+    pol = make_routing_policy("fill-first")
+    alloc = alloc_map(pol.split(10, GPU1, [onprem, cloud], 0.0))
+    assert alloc == {"onprem": 10}
+
+
+def test_fill_first_overflows_to_next_backend():
+    onprem = static_backend("onprem", n_nodes=1, gpus=2)   # 2 slots
+    cloud = elastic_backend("cloud")
+    pol = make_routing_policy("fill-first")
+    alloc = alloc_map(pol.split(10, GPU1, [onprem, cloud], 0.0))
+    assert alloc == {"onprem": 2, "cloud": 8}
+
+
+def test_cheapest_first_beats_declaration_order():
+    cloud = elastic_backend("cloud", hourly=2.5)
+    onprem = static_backend("onprem", n_nodes=2, gpus=8)   # sunk cost
+    # fill-first would pick the cloud (declared first)...
+    fill = alloc_map(make_routing_policy("fill-first").split(
+        10, GPU1, [cloud, onprem], 0.0))
+    assert fill == {"cloud": 10}
+    # ...cheapest-first routes to the free on-prem capacity
+    cheap = alloc_map(make_routing_policy("cheapest-first").split(
+        10, GPU1, [cloud, onprem], 0.0))
+    assert cheap == {"onprem": 10}
+    assert onprem.marginal_pod_cost(GPU1) < cloud.marginal_pod_cost(GPU1)
+
+
+def test_spot_with_fallback_prefers_spot_then_falls_back():
+    ondemand = elastic_backend("ondemand", hourly=2.0)
+    spot = elastic_backend("spot", hourly=0.5, spot=True, max_nodes=1)
+    pol = make_routing_policy("spot-with-fallback")
+    alloc = alloc_map(pol.split(10, GPU1, [ondemand, spot], 0.0))
+    # spot absorbs one node's worth (7), the rest falls back to on-demand
+    assert alloc == {"spot": 7, "ondemand": 3}
+
+
+def test_spot_overflow_queues_on_fallback_not_spot():
+    ondemand = elastic_backend("ondemand", max_nodes=1)    # 7 slots
+    spot = elastic_backend("spot", spot=True, max_nodes=1)  # 7 slots
+    pol = make_routing_policy("spot-with-fallback")
+    alloc = alloc_map(pol.split(20, GPU1, [ondemand, spot], 0.0))
+    # 6 pods exceed all headroom -> they queue on the reliable backend
+    assert alloc == {"spot": 7, "ondemand": 3 + 4 + 6}
+
+
+def test_weighted_spread_is_proportional():
+    a = static_backend("a", n_nodes=4, gpus=8)
+    b = static_backend("b", n_nodes=4, gpus=8)
+    a.weight, b.weight = 3.0, 1.0
+    pol = make_routing_policy("weighted-spread")
+    alloc = alloc_map(pol.split(8, GPU1, [a, b], 0.0))
+    assert alloc == {"a": 6, "b": 2}
+
+
+def test_unknown_routing_policy_rejected():
+    with pytest.raises(ValueError):
+        make_routing_policy("round-robin-of-doom")
+
+
+def test_headroom_accounts_for_pending_and_caps():
+    b = static_backend("onprem", n_nodes=1, gpus=4)
+    assert b.headroom(GPU1) == 4
+    for i in range(3):
+        b.cluster.create_pod(
+            Pod(name=f"p{i}", request=dict(GPU1),
+                labels={"owner": "prp-provisioner"}), now=0.0)
+    assert b.headroom(GPU1) == 1          # 4 free minus 3 queued
+    b.max_pods = 3
+    assert b.headroom(GPU1) == 0          # provider-level pod cap
+
+
+# ---------------------------------------------------------------------------
+# [backend:*] INI parsing round-trip
+# ---------------------------------------------------------------------------
+
+FEDERATION_INI = """\
+[provision]
+submit_interval_s=30
+idle_timeout_s=120
+startup_delay_s=30
+routing_policy=cheapest-first
+
+[k8s]
+priority_class=opportunistic
+
+[backend:onprem]
+kind=static
+nodes=2
+capacity_dict=cpu:64,gpu:8,memory:512,disk:1024
+node_labels_dict=gpu-type:A100
+
+[backend:cloud]
+kind=autoscale
+capacity_dict=cpu:64,gpu:7,memory:512,disk:1024
+max_nodes=6
+node_hourly_cost=2.5
+provision_delay_s=60
+scale_down_delay_s=120
+priority_class=production
+
+[backend:spot]
+kind=autoscale
+spot=true
+capacity_dict=cpu:64,gpu:8,memory:512,disk:1024
+max_nodes=8
+node_hourly_cost=0.8
+pod_hourly_cost=0.05
+weight=2.0
+"""
+
+
+def test_multibackend_ini_parses():
+    cfg = load_ini(FEDERATION_INI)
+    assert cfg.routing_policy == "cheapest-first"
+    assert [b.name for b in cfg.backends] == ["onprem", "cloud", "spot"]
+    onprem, cloud, spot = cfg.backends
+    assert onprem.kind == "static" and onprem.nodes == 2
+    assert onprem.node_labels == {"gpu-type": "A100"}
+    assert cloud.kind == "autoscale" and cloud.max_nodes == 6
+    assert cloud.node_hourly_cost == 2.5
+    assert cloud.priority_class == "production"
+    assert spot.spot is True and spot.weight == 2.0
+    assert spot.pod_hourly_cost == 0.05
+
+
+def test_ini_roundtrip_through_dump():
+    cfg = load_ini(FEDERATION_INI)
+    cfg2 = load_ini(dump_ini(cfg))
+    assert cfg2.backends == cfg.backends
+    assert cfg2.routing_policy == cfg.routing_policy
+    assert cfg2.max_total_pods == cfg.max_total_pods
+    assert cfg2.priority_class == cfg.priority_class
+
+
+def test_paper_fig1_ini_still_single_backend():
+    from repro.core import PAPER_EXAMPLE_INI
+    cfg = load_ini(PAPER_EXAMPLE_INI)
+    assert cfg.backends == ()             # Fig-1 format: default backend
+    assert cfg.routing_policy == "fill-first"
+    sim = Simulation.from_config(cfg, nodes=onprem_nodes(1, gpus=8))
+    assert len(sim.backends) == 1 and sim.backends[0].name == "default"
+
+
+def test_build_backends_materializes_sections():
+    cfg = load_ini(FEDERATION_INI)
+    backends = build_backends(cfg)
+    assert [b.name for b in backends] == ["onprem", "cloud", "spot"]
+    assert len(backends[0].cluster.nodes) == 2          # static pool, t=0
+    assert backends[1].autoscaler is not None
+    assert backends[1].autoscaler.max_nodes == 6
+    assert backends[2].spot and backends[2].autoscaler is not None
+
+
+# ---------------------------------------------------------------------------
+# End-to-end federation + per-backend stats attribution
+# ---------------------------------------------------------------------------
+
+def test_federated_simulation_attributes_stats_per_backend():
+    cfg = load_ini(FEDERATION_INI)
+    cfg.routing_policy = "fill-first"
+    # shrink on-prem so demand spills into the cloud
+    cfg.backends[0].nodes = 1
+    cfg.backends = (cfg.backends[0],
+                    dataclass_with(cfg.backends[1], max_nodes=4))
+    sim = Simulation.from_config(cfg, tick_s=5)
+    sim.submit_jobs(0, [gpu_job(300, gpus=1) for _ in range(20)])
+    sim.run_until_drained(max_t=20000)
+    assert sim.queue.drained()
+    per = sim.provisioner.stats.per_backend_submitted
+    assert per.get("onprem", 0) > 0 and per.get("cloud", 0) > 0
+    assert sum(per.values()) == sim.provisioner.stats.submitted
+    s = sim.summary()
+    assert set(s["backends"]) == {"onprem", "cloud"}
+    assert s["backends"]["cloud"]["cost"] > 0       # billed nodes ran
+    assert s["backends"]["onprem"]["cost"] == 0     # sunk/donated
+    assert s["backends"]["onprem"]["waste_fraction"] == 0.0
+    assert 0 <= s["backends"]["cloud"]["waste_fraction"] < 1
+    assert (s["backends"]["onprem"]["pods_submitted"]
+            + s["backends"]["cloud"]["pods_submitted"]
+            == s["pods_submitted"])
+    # per-backend recorder series exist in multi-backend mode
+    assert set(sim.recorder.backends_recorded()) == {"onprem", "cloud"}
+    assert sim.recorder.backend_values("live_pods", "cloud")
+
+
+def dataclass_with(bc, **kw):
+    import dataclasses
+    return dataclasses.replace(bc, **kw)
+
+
+def test_spot_reclaim_is_survivable_and_attributed():
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=120,
+                            startup_delay_s=30,
+                            routing_policy="spot-with-fallback")
+    ondemand = elastic_backend("ondemand", hourly=2.0, max_nodes=4)
+    spot = elastic_backend("spot", hourly=0.5, spot=True, max_nodes=4)
+    sim = Simulation(cfg, backends=[ondemand, spot], tick_s=5)
+    sim.submit_jobs(0, [gpu_job(400, gpus=1) for _ in range(10)])
+    sim.inject_pod_preemption(300, frac=0.5, backend="spot")
+    sim.run_until_drained(max_t=30000)
+    assert sim.queue.drained()
+    assert spot.stats.pods_reclaimed >= 1
+    assert spot.stats.pods_submitted > 0        # spot was preferred
+    s = sim.summary()
+    assert s["jobs"]["n"] == 10
+    assert s["backends"]["spot"]["pods_reclaimed"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Single-backend compatibility adapter
+# ---------------------------------------------------------------------------
+
+def test_bare_cluster_still_accepted_by_provisioner():
+    from repro.core import Collector, JobQueue
+    cluster = KubeCluster(onprem_nodes(2, gpus=8))
+    prov = Provisioner(ProvisionerConfig(), JobQueue(), Collector(),
+                       cluster)
+    assert len(prov.backends) == 1
+    assert prov.cluster is cluster          # compat property
+    assert prov.backends[0].name == "default"
+
+
+def test_seed_simulation_signature_unchanged():
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=120,
+                            startup_delay_s=30)
+    sim = Simulation(cfg, nodes=onprem_nodes(2, gpus=8), tick_s=5)
+    assert sim.cluster is sim.backends[0].cluster
+    assert sim.autoscaler is None
+    sim.submit_jobs(0, [gpu_job(200, gpus=1) for _ in range(4)])
+    sim.run_until_drained(max_t=10000)
+    assert sim.queue.drained()
+    sim.run(sim.now + 500)                  # let idle timeouts expire
+    assert not sim.collector.workers        # C2 scale-to-zero intact
+    s = sim.summary()
+    assert s["backends"]["default"]["pods_submitted"] == s["pods_submitted"]
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_group_label_stable_across_hash_seeds():
+    """builtin hash() is salted per-process; labels must not be, or a
+    provisioner restart orphans every pending pod's group count."""
+    snippet = (
+        "from repro.core import Collector, JobQueue, KubeCluster, "
+        "Provisioner, ProvisionerConfig\n"
+        "from repro.core.groups import GroupSignature\n"
+        "p = Provisioner(ProvisionerConfig(), JobQueue(), Collector(), "
+        "KubeCluster([]))\n"
+        "print(p._pod_group_label(GroupSignature(cpus=2, gpus=1, "
+        "arch='x86_64')))\n"
+    )
+    labels = set()
+    for hash_seed in ("0", "12345"):
+        env = dict(os.environ, PYTHONHASHSEED=hash_seed)
+        env["PYTHONPATH"] = (
+            "src" + os.pathsep + env.get("PYTHONPATH", ""))
+        out = subprocess.run(
+            [sys.executable, "-c", snippet], env=env, cwd=os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True, check=True)
+        labels.add(out.stdout.strip())
+    assert len(labels) == 1 and labels.pop().startswith("grp-")
+
+
+def test_autoscaler_counts_live_headroom_before_booting_nodes():
+    """Regression: freshly-submitted pods that FIT existing free capacity
+    must not boot spurious nodes while the scheduler hasn't placed them."""
+    cluster = KubeCluster([], name="cloud")
+    tmpl = NodeTemplate(capacity={"cpu": 64, "gpu": 7, "memory": 512,
+                                  "disk": 1024},
+                        provision_delay_s=0, scale_down_delay_s=600)
+    scaler = NodeAutoscaler(cluster, tmpl, max_nodes=8)
+    cluster.add_node(Node(name="np-0", capacity=dict(tmpl.capacity)),
+                     now=0.0)
+    for i in range(7):      # exactly one live node's worth of pods
+        cluster.create_pod(Pod(name=f"p{i}", request=dict(GPU1)), now=0.0)
+    assert scaler._nodes_needed() == 0
+    cluster.create_pod(Pod(name="p7", request=dict(GPU1)), now=0.0)
+    assert scaler._nodes_needed() == 1      # true overflow still scales
+
+
+def test_autoscaler_seeding_respects_taints_and_selectors():
+    """A pod blocked from live nodes by taints/affinity must still drive
+    a scale-up — free capacity it can never use is not headroom."""
+    cluster = KubeCluster([], name="cloud")
+    tmpl = NodeTemplate(capacity={"cpu": 64, "gpu": 7, "memory": 512,
+                                  "disk": 1024},
+                        provision_delay_s=0, scale_down_delay_s=600)
+    scaler = NodeAutoscaler(cluster, tmpl, max_nodes=8)
+    cluster.add_node(
+        Node(name="dedicated-0", capacity={"cpu": 64, "gpu": 7,
+                                           "memory": 512, "disk": 1024},
+             taints=("dedicated",)),
+        now=0.0)
+    cluster.create_pod(Pod(name="p0", request=dict(GPU1)), now=0.0)
+    assert scaler._nodes_needed() == 1      # can't use the tainted node
+    cluster.create_pod(
+        Pod(name="p1", request=dict(GPU1),
+            node_selector={"zone": "east"}), now=0.0)
+    # selector misses the live node too, but p1 shares p0's NEW node bin
+    assert scaler._nodes_needed() == 1
+    cluster.create_pod(
+        Pod(name="p2", request=dict(GPU1), tolerations=("dedicated",)),
+        now=0.0)
+    assert scaler._nodes_needed() == 1      # tolerating pod rides free cap
+
+
+def test_federationwide_preemption_attributes_reclaims():
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=120,
+                            startup_delay_s=30)
+    a = static_backend("a", n_nodes=1, gpus=4)
+    b = static_backend("b", n_nodes=1, gpus=4)
+    sim = Simulation(cfg, backends=[a, b], tick_s=5)
+    sim.submit_jobs(0, [gpu_job(400, gpus=1) for _ in range(8)])
+    sim.inject_pod_preemption(200, frac=1.0)      # no backend arg
+    sim.run_until_drained(max_t=20000)
+    assert sim.queue.drained()
+    assert a.stats.pods_reclaimed + b.stats.pods_reclaimed >= 1
+
+
+def test_autoscaler_no_spurious_node_when_pods_unplaced():
+    cluster = KubeCluster([], name="cloud")
+    tmpl = NodeTemplate(capacity={"cpu": 64, "gpu": 7, "memory": 512,
+                                  "disk": 1024},
+                        provision_delay_s=0, scale_down_delay_s=600)
+    scaler = NodeAutoscaler(cluster, tmpl, max_nodes=8)
+    for i in range(7):
+        cluster.create_pod(Pod(name=f"p{i}", request=dict(GPU1)), now=0.0)
+    scaler.tick(0.0, 5.0)       # books exactly one node
+    scaler.tick(5.0, 5.0)       # node is live, pods still PENDING here:
+    # a second tick before the scheduler runs must not double-provision
+    assert scaler.provisioned_total == 1

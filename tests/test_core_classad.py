@@ -1,6 +1,6 @@
 """ClassAd expression language + symmetric matchmaking (paper C3)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.classad import ClassAdExpr, UNDEFINED, symmetric_match
 

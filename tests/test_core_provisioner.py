@@ -1,7 +1,7 @@
 """Provisioning-logic invariants (paper §2): deficit accounting, grouping,
 self-termination, preemption resilience, two-level scaling."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     Collector, Job, JobQueue, KubeCluster, Node, NodeAutoscaler,

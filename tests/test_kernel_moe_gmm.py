@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.moe_gmm.kernel import gmm_pallas, tile_expert_map
 from repro.kernels.moe_gmm.ops import gmm
