@@ -1,0 +1,119 @@
+"""Event engine vs. the seed tick loop: matchmaking throughput at scale.
+
+The tentpole claim: a heap-scheduled event loop + indexed job queue +
+cohort-vectorized negotiator turns the O(jobs×workers)-per-tick seed
+harness into one that drains 100k-job federated campaigns in seconds.
+
+Two modes:
+
+  * default (10k jobs): runs BOTH engines on the same 3-backend
+    federation and reports the jobs/sec ratio (acceptance: >= 10x)
+  * CI smoke (--jobs 1000 --budget-s N): wall-clock budget on the event
+    engine so matchmaking-throughput regressions fail the build; the
+    baseline ratio is still recorded
+
+Usage:
+    python benchmarks/bench_event_engine.py [--jobs 10000]
+        [--budget-s SECONDS] [--no-baseline] [--min-ratio 10]
+    python benchmarks/bench_event_engine.py --jobs 100000 --no-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import Timer, emit
+from repro.core import (
+    KubeBackend, KubeCluster, NodeAutoscaler, NodeTemplate,
+    ProvisionerConfig, Simulation, gpu_job, onprem_nodes,
+)
+
+
+def federation():
+    """3 providers: static on-prem, NAP-style cloud, spot (paper §2+§6)."""
+    onprem = KubeBackend(
+        "onprem", KubeCluster(onprem_nodes(8, gpus=8, prefix="onprem"),
+                              name="onprem"))
+    backends = [onprem]
+    for name, max_nodes, hourly, spot in (
+        ("cloud", 24, 2.5, False), ("spot", 24, 0.8, True),
+    ):
+        cluster = KubeCluster([], name=name)
+        tmpl = NodeTemplate(
+            capacity={"cpu": 64, "gpu": 8, "memory": 512, "disk": 1024},
+            provision_delay_s=60, scale_down_delay_s=300,
+            hourly_cost=hourly)
+        backends.append(KubeBackend(
+            name, cluster,
+            NodeAutoscaler(cluster, tmpl, max_nodes=max_nodes,
+                           prefix=f"{name}-np"),
+            spot=spot))
+    return backends
+
+
+def build(n_jobs: int, engine: str) -> Simulation:
+    cfg = ProvisionerConfig(
+        submit_interval_s=30, idle_timeout_s=120, startup_delay_s=30,
+        max_pods_per_group=600, max_total_pods=600)
+    sim = Simulation(cfg, backends=federation(), tick_s=5, engine=engine,
+                     metrics_interval_s=60 if engine == "event" else None)
+    sim.submit_jobs(0, [gpu_job(120, gpus=1) for _ in range(n_jobs)])
+    return sim
+
+
+def drain(n_jobs: int, engine: str) -> dict:
+    sim = build(n_jobs, engine)
+    with Timer() as t:
+        sim.run_until_drained(max_t=5e6)
+    assert sim.queue.drained(), f"{engine} engine failed to drain"
+    done = len(sim.queue.completed_log)
+    assert done == n_jobs, (done, n_jobs)
+    return {
+        "engine": engine,
+        "jobs": n_jobs,
+        "wall_s": round(t.s, 3),
+        "jobs_per_sec": round(done / t.s, 1),
+        "makespan_s": sim.now,
+        "pods_submitted": sim.provisioner.stats.submitted,
+        "gpu_utilization": round(sim.summary()["gpu_utilization"], 4),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=10_000)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if the event engine's wall time exceeds this")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip the (slow) tick-loop baseline")
+    ap.add_argument("--min-ratio", type=float, default=None,
+                    help="fail if event/tick jobs-per-sec ratio is below")
+    args = ap.parse_args(argv)
+
+    event = drain(args.jobs, "event")
+    payload: dict = {"event": event}
+    print(f"event engine: {event['jobs_per_sec']} jobs/s "
+          f"({event['wall_s']}s wall, makespan {event['makespan_s']:.0f}s)")
+
+    if not args.no_baseline:
+        tick = drain(args.jobs, "tick")
+        ratio = event["jobs_per_sec"] / max(tick["jobs_per_sec"], 1e-9)
+        payload["tick"] = tick
+        payload["speedup"] = round(ratio, 2)
+        print(f"tick baseline: {tick['jobs_per_sec']} jobs/s "
+              f"({tick['wall_s']}s wall) -> speedup {ratio:.1f}x")
+        if args.min_ratio is not None and ratio < args.min_ratio:
+            print(f"FAIL: speedup {ratio:.1f}x < required "
+                  f"{args.min_ratio}x", file=sys.stderr)
+            return 1
+
+    emit("event_engine", payload)
+    if args.budget_s is not None and event["wall_s"] > args.budget_s:
+        print(f"FAIL: event engine took {event['wall_s']}s "
+              f"> budget {args.budget_s}s", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

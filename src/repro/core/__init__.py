@@ -2,7 +2,8 @@
 Kubernetes-managed resources into HTCondor pools (Sfiligoi et al., PEARC22).
 """
 from repro.core.classad import ClassAdExpr, symmetric_match, UNDEFINED
-from repro.core.jobqueue import Job, JobQueue, JobState
+from repro.core.events import EventHandle, EventLoop, PeriodicHandle
+from repro.core.jobqueue import Job, JobQueue, JobState, cohort_key_of
 from repro.core.cluster import KubeCluster, Node, Pod, PodPhase
 from repro.core.worker import Collector, Worker, advance_workers, kill_worker
 from repro.core.groups import GroupSignature, group_jobs, signature_of

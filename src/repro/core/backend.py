@@ -128,6 +128,7 @@ class KubeBackend:
         self.spot = spot
         self.weight = weight
         self.stats = BackendStats()
+        self._cost_t = 0.0            # cost accrued up to this sim time
 
     # -- ScalingBackend surface ---------------------------------------------
     def pending(self, label: str | None = None) -> int:
@@ -138,11 +139,9 @@ class KubeBackend:
         return len(self.cluster.pending_pods(sel))
 
     def live_pods(self) -> int:
-        return len([
-            p for p in self.cluster.pods.values()
-            if p.phase in (PodPhase.PENDING, PodPhase.RUNNING)
-            and p.labels.get("owner") == OWNER
-        ])
+        sel = (lambda p: p.labels.get("owner") == OWNER)
+        return (len(self.cluster.pending_pods(sel))
+                + len(self.cluster.running_pods(sel)))
 
     def submit(self, spec: PodSpec, now: float) -> str:
         selector = dict(spec.node_selector)
@@ -170,11 +169,27 @@ class KubeBackend:
         return self.cluster.create_pod(pod, now)
 
     def tick(self, now: float, dt: float) -> None:
+        """Advance this provider by one interval ending at `now`: accrue
+        cost at the pre-mutation rate, then node autoscaler, pod
+        scheduler, and (lazy, exact-to-`now`) accounting.  Under the
+        event engine this runs as a periodic event-loop callback
+        (`schedule_backend_on`); the tick engine still polls it."""
+        self.accrue_cost(now)         # BEFORE nodes change: a node added
+        #                               at `now` is not billed for the past
         if self.autoscaler is not None:
             self.autoscaler.tick(now, dt)
         self.cluster.schedule(now)
-        self.cluster.tick_accounting(dt)
-        self.stats.cost_total += self.cost_rate() * dt
+        self.cluster.tick_accounting(dt, now)
+
+    def accrue_cost(self, now: float):
+        """Integrate $ burn continuously up to `now` at the current rate
+        (rate changes between accrual points bill at the newer rate for
+        the elapsed slice — bounded by the tick interval).  Idempotent at
+        fixed `now`; the simulation flushes it before every summary so
+        partial final intervals are charged."""
+        if now > self._cost_t:
+            self.stats.cost_total += self.cost_rate() * (now - self._cost_t)
+            self._cost_t = now
 
     def cost_rate(self) -> float:
         """Current burn in $/s: billed nodes plus per-pod surcharges."""
@@ -252,6 +267,22 @@ class KubeBackend:
             self.cluster.delete_pod(pods[i].name, now, "preempted")
         self.stats.pods_reclaimed += len(idx)
         return len(idx)
+
+
+def schedule_backend_on(backend, loop, interval_s: float, *,
+                        priority: int = 0):
+    """Drive any ScalingBackend from a discrete-event loop: periodic
+    `tick`s at exact cadence (the k-th fires at now + k*interval and
+    accounts the interval ENDING at its firing), preceded by a zero-dt
+    priming pass at t=now so pods submitted by the first reconcile place
+    immediately, like the seed's first tick did.  Works for backends that
+    only implement the Protocol (no event-loop awareness required)."""
+    loop.schedule(loop.now, lambda now: backend.tick(now, 0.0),
+                  name=f"backend:{backend.name}:prime", priority=priority)
+    return loop.every(interval_s,
+                      lambda now: backend.tick(now, interval_s),
+                      first=loop.now + interval_s,
+                      name=f"backend:{backend.name}", priority=priority)
 
 
 def _pods_fit(free: dict[str, float], request: dict[str, float]) -> int:

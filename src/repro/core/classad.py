@@ -73,6 +73,7 @@ class ClassAdExpr:
 
     def __init__(self, src: str | None):
         self.src = (src or "").strip()
+        self.refs: frozenset[str] = frozenset()  # ad attrs the expr reads
         if not self.src or self.src.lower() == "true":
             self._tree = None  # vacuously true
             return
@@ -99,6 +100,16 @@ class ClassAdExpr:
                         f"disallowed attribute access in ClassAd "
                         f"expression: {self.src!r}"
                     )
+        refs = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Name):
+                n = node.id.lower()
+                if n not in ("my", "target", "true", "false",
+                             "undefined") and n not in _ALLOWED_FUNCS:
+                    refs.add(n)
+            elif isinstance(node, ast.Attribute):
+                refs.add(node.attr.lower())
+        self.refs = frozenset(refs)
         self._tree = compile(tree, "<classad>", "eval")
 
     def evaluate(self, my: Mapping[str, Any],

@@ -16,6 +16,15 @@ mechanisms the paper relies on:
 
 The cluster is deliberately control-plane-only: pod "work" happens in
 worker.py (HTCondor startd side).  Everything advances via tick(now).
+
+Scale: pods are indexed by phase (PENDING/RUNNING dicts) and running pods
+additionally by node, so `pending_pods()`, `running_pods()`, and node
+drain are O(result) instead of O(all pods ever).  The scheduler is
+event-driven via a dirty flag: a pass only runs when something that could
+change placement happened (pod created/stopped, node added/removed) — a
+pool with only unplaceable pending pods costs nothing per tick.  Node
+busy-resource-seconds integrate lazily at every usage change, so a pod
+reclaimed mid-tick is accounted to its exact stop time.
 """
 from __future__ import annotations
 
@@ -95,8 +104,34 @@ class KubeCluster:
         self.events: list[tuple[float, str, str]] = []  # (t, kind, detail)
         # incremental per-node usage cache (O(1) allocatable checks)
         self._used: dict[str, dict[str, float]] = {}
+        # phase/node indexes (O(result) listings at 100k-pod scale)
+        self._pending: dict[str, Pod] = {}
+        self._running: dict[str, Pod] = {}
+        self._node_pods: dict[str, dict[str, Pod]] = {}
+        # lazy busy-integral accounting: last time each node was integrated
+        self._acct_t: dict[str, float] = {n: 0.0 for n in self.nodes}
+        # scheduler dirty flag: pass runs only when placement could change
+        self._dirty = True
 
-    def _use(self, node: str, request: dict, sign: float):
+    def _account_node(self, name: str, t: float):
+        """Integrate a node's alive time AND busy resource-seconds up to
+        `t` with the CURRENT usage — called before any usage change, so a
+        mid-tick pod stop is accounted at its exact timestamp and
+        utilization (busy/alive) can never exceed 1."""
+        node = self.nodes.get(name)
+        if node is None:
+            return
+        t0 = self._acct_t.get(name, node.created_at)
+        if t > t0:
+            node.alive_s += t - t0
+            for k, v in self._used.get(name, {}).items():
+                if v:
+                    node.busy_integral[k] = (
+                        node.busy_integral.get(k, 0) + v * (t - t0))
+        self._acct_t[name] = max(t0, t)
+
+    def _use(self, node: str, request: dict, sign: float, now: float):
+        self._account_node(node, now)
         u = self._used.setdefault(node, {})
         for k, v in request.items():
             u[k] = u.get(k, 0) + sign * v
@@ -109,6 +144,9 @@ class KubeCluster:
         pod.name = pod.name or f"pod-{next(self._ids)}"
         pod.created_at = now
         self.pods[pod.name] = pod
+        if pod.phase == PodPhase.PENDING:
+            self._pending[pod.name] = pod
+            self._dirty = True
         return pod.name
 
     def delete_pod(self, name: str, now: float, reason: str = "deleted"):
@@ -120,26 +158,35 @@ class KubeCluster:
 
     def pending_pods(self, selector: Callable[[Pod], bool] | None = None
                      ) -> list[Pod]:
-        out = [p for p in self.pods.values() if p.phase == PodPhase.PENDING]
+        out = list(self._pending.values())
         return [p for p in out if selector(p)] if selector else out
 
     def running_pods(self, selector: Callable[[Pod], bool] | None = None
                      ) -> list[Pod]:
-        out = [p for p in self.pods.values() if p.phase == PodPhase.RUNNING]
+        out = list(self._running.values())
         return [p for p in out if selector(p)] if selector else out
+
+    def pods_on_node(self, name: str) -> list[Pod]:
+        """RUNNING pods on one node (O(result); node drain, autoscaler)."""
+        return list(self._node_pods.get(name, {}).values())
 
     # -- node lifecycle (autoscaler / failures) ------------------------------
     def add_node(self, node: Node, now: float):
         node.created_at = now
         self.nodes[node.name] = node
+        self._acct_t[node.name] = now
+        self._dirty = True
         self.events.append((now, "node_add", node.name))
 
     def remove_node(self, name: str, now: float, reason: str = "scale_down"):
-        for pod in list(self.pods.values()):
-            if pod.node == name and pod.phase == PodPhase.RUNNING:
-                self._stop_pod(pod, now, f"node_{reason}")
+        for pod in self.pods_on_node(name):
+            self._stop_pod(pod, now, f"node_{reason}")
+        self._account_node(name, now)
         self.nodes.pop(name, None)
         self._used.pop(name, None)
+        self._node_pods.pop(name, None)
+        self._acct_t.pop(name, None)
+        self._dirty = True
         self.events.append((now, "node_remove", f"{name}:{reason}"))
 
     def fail_node(self, name: str, now: float):
@@ -163,14 +210,20 @@ class KubeCluster:
     def _stop_pod(self, pod: Pod, now: float, reason: str):
         if pod.phase == PodPhase.RUNNING:
             if pod.node is not None:
-                self._use(pod.node, pod.request, -1.0)
+                self._use(pod.node, pod.request, -1.0, now)
+                node_idx = self._node_pods.get(pod.node)
+                if node_idx is not None:
+                    node_idx.pop(pod.name, None)
             if pod.on_stop is not None:
                 pod.on_stop(pod, now, reason)
         if pod.phase in (PodPhase.RUNNING, PodPhase.PENDING):
+            self._pending.pop(pod.name, None)
+            self._running.pop(pod.name, None)
             pod.phase = (PodPhase.FAILED if reason != "completed"
                          else PodPhase.SUCCEEDED)
             pod.stopped_at = now
             pod.stop_reason = reason
+            self._dirty = True
 
     def succeed_pod(self, name: str, now: float):
         """Worker self-termination (C2) reports success."""
@@ -181,7 +234,11 @@ class KubeCluster:
 
     def schedule(self, now: float):
         """One scheduling pass: place pending pods (highest priority first,
-        FIFO within class); preempt lower-priority pods when allowed."""
+        FIFO within class); preempt lower-priority pods when allowed.
+        Skipped entirely when nothing changed since the last pass."""
+        if not self._pending or not self._dirty:
+            return
+        self._dirty = False
         pending = sorted(
             self.pending_pods(), key=lambda p: (-p.priority, p.created_at)
         )
@@ -206,7 +263,10 @@ class KubeCluster:
         node = best[2]
         pod.phase = PodPhase.RUNNING
         pod.node = node.name
-        self._use(node.name, pod.request, +1.0)
+        self._pending.pop(pod.name, None)
+        self._running[pod.name] = pod
+        self._node_pods.setdefault(node.name, {})[pod.name] = pod
+        self._use(node.name, pod.request, +1.0, now)
         pod.started_at = now
         if pod.on_start is not None:
             pod.on_start(pod, now)
@@ -217,9 +277,8 @@ class KubeCluster:
         node that would make room (k8s preemption, simplified)."""
         for node in self.nodes.values():
             victims = [
-                p for p in self.pods.values()
-                if p.node == node.name and p.phase == PodPhase.RUNNING
-                and p.priority < pod.priority
+                p for p in self.pods_on_node(node.name)
+                if p.priority < pod.priority
             ]
             if not victims:
                 continue
@@ -250,11 +309,15 @@ class KubeCluster:
         return False
 
     # -- accounting -----------------------------------------------------------
-    def tick_accounting(self, dt: float):
-        for node in self.nodes.values():
-            node.alive_s += dt
-            for k, v in self._used.get(node.name, {}).items():
-                node.busy_integral[k] = node.busy_integral.get(k, 0) + v * dt
+    def tick_accounting(self, dt: float, now: float | None = None):
+        """Bring every node's lazy alive/busy integrals up to `now`
+        (defaults to self.now + dt for tick-loop callers).  Idempotent at
+        a fixed `now`, so priming passes and repeated ticks are safe."""
+        if now is None:
+            now = self.now + dt
+        self.now = max(self.now, now)
+        for name in self.nodes:
+            self._account_node(name, now)
 
     def utilization(self, resource: str = "gpu") -> float:
         """Fraction of provisioned resource-seconds actually used."""
@@ -279,9 +342,8 @@ class KubeCluster:
     def count_pods(self, **labels: str) -> int:
         """Live pods matching every given label (backend attribution)."""
         n = 0
-        for p in self.pods.values():
-            if p.phase not in (PodPhase.PENDING, PodPhase.RUNNING):
-                continue
+        for p in itertools.chain(self._pending.values(),
+                                 self._running.values()):
             if all(p.labels.get(k) == v for k, v in labels.items()):
                 n += 1
         return n

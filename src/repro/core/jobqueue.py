@@ -8,13 +8,20 @@ work_fn that advances actual JAX training steps instead.
 Preemption semantics (paper §5): a preempted job transparently returns to
 IDLE and reruns elsewhere; `preempt_count` and total wasted work are
 tracked for the benchmarks.
+
+Scale: the queue is fully indexed.  Jobs live in per-state buckets, so
+`n_idle()` / `n_running()` are O(1), and idle jobs are additionally
+bucketed into COHORTS — groups with identical ads and requirement
+expressions, hence identical matchmaking behaviour.  A 100k-job campaign
+of uniform jobs is ONE cohort: the negotiator and the provisioner evaluate
+ClassAd expressions once per cohort instead of once per job.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import itertools
-from typing import Any, Callable
+from typing import Any, Callable, Iterator
 
 from repro.core.classad import ClassAdExpr
 
@@ -45,10 +52,31 @@ class Job:
     preempt_count: int = 0
     wasted_s: float = 0.0         # work lost to preemption
     claimed_by: str | None = None
+    cohort_key: tuple | None = None   # assigned at submit; ad-derived
 
     def __post_init__(self):
         if self.remaining_s < 0:
             self.remaining_s = self.runtime_s
+
+
+def _freeze(v: Any) -> Any:
+    if isinstance(v, (int, float, str, bool, type(None))):
+        return v
+    return repr(v)
+
+
+def canonical_ad(ad: dict[str, Any]) -> tuple:
+    """Hashable canonical form of an ad.  Job cohorts AND worker slot
+    shapes use this SAME canonicalization — the two halves jointly key
+    the collector's match cache, so they must never diverge."""
+    return tuple(sorted((str(k), _freeze(v)) for k, v in ad.items()))
+
+
+def cohort_key_of(job: Job) -> tuple:
+    """Matchmaking-equivalence key: two jobs with the same key match the
+    same workers (same ad contents, same Requirements expression)."""
+    req = job.requirements.src if job.requirements is not None else ""
+    return (req, canonical_ad(job.ad))
 
 
 class JobQueue:
@@ -59,21 +87,96 @@ class JobQueue:
         self._jobs: dict[int, Job] = {}
         self._ids = itertools.count()
         self.completed_log: list[Job] = []
+        # indexes: per-state buckets + idle cohorts (jid -> Job each)
+        self._by_state: dict[JobState, dict[int, Job]] = {
+            s: {} for s in JobState
+        }
+        self._idle_cohorts: dict[tuple, dict[int, Job]] = {}
+        # per-cohort FIFO bookkeeping: earliest (submitted_at, jid) seen
+        # (sort key across cohorts) and whether insertion order ever
+        # violated FIFO (a released job re-entering behind newer ones) —
+        # only then does cohort_jobs_sorted() actually have to sort
+        self._cohort_min: dict[tuple, tuple] = {}
+        self._cohort_tail: dict[tuple, tuple] = {}
+        self._cohort_unsorted: set[tuple] = set()
+
+    # -- index maintenance ---------------------------------------------------
+    def _enter_state(self, job: Job, state: JobState):
+        self._by_state[state][job.jid] = job
+        job.state = state
+        if state == JobState.IDLE:
+            key = job.cohort_key
+            self._idle_cohorts.setdefault(key, {})[job.jid] = job
+            order = (job.submitted_at, job.jid)
+            cur_min = self._cohort_min.get(key)
+            if cur_min is None or order < cur_min:
+                self._cohort_min[key] = order
+            tail = self._cohort_tail.get(key)
+            if tail is not None and order < tail:
+                self._cohort_unsorted.add(key)
+            if tail is None or order > tail:
+                self._cohort_tail[key] = order
+
+    def _leave_state(self, job: Job):
+        self._by_state[job.state].pop(job.jid, None)
+        if job.state == JobState.IDLE:
+            key = job.cohort_key
+            cohort = self._idle_cohorts.get(key)
+            if cohort is not None:
+                cohort.pop(job.jid, None)
+                if not cohort:
+                    del self._idle_cohorts[key]
+                    self._cohort_min.pop(key, None)
+                    self._cohort_tail.pop(key, None)
+                    self._cohort_unsorted.discard(key)
 
     def submit(self, job: Job, now: float = 0.0) -> int:
         job.jid = next(self._ids)
         job.submitted_at = now
-        job.state = JobState.IDLE
+        if job.cohort_key is None:
+            job.cohort_key = cohort_key_of(job)
         self._jobs[job.jid] = job
+        self._enter_state(job, JobState.IDLE)
         return job.jid
 
     def jobs(self, state: JobState | None = None) -> list[Job]:
         if state is None:
             return list(self._jobs.values())
-        return [j for j in self._jobs.values() if j.state == state]
+        return list(self._by_state[state].values())
 
     def idle_jobs(self) -> list[Job]:
-        return self.jobs(JobState.IDLE)
+        return list(self._by_state[JobState.IDLE].values())
+
+    def idle_cohorts(self) -> Iterator[tuple[tuple, dict[int, Job]]]:
+        """(cohort_key, {jid: job}) for every non-empty idle cohort.
+        Every job in a cohort matches exactly the same workers."""
+        return iter(list(self._idle_cohorts.items()))
+
+    def cohort_first_submit(self, key: tuple) -> tuple:
+        """Earliest (submitted_at, jid) a cohort has held while idle —
+        the negotiator's cross-cohort FIFO key.  May be slightly stale
+        after the oldest member leaves; a lower bound is fine for
+        ordering."""
+        return self._cohort_min.get(key, (float("inf"), -1))
+
+    def cohort_jobs_sorted(self, key: tuple) -> list[Job]:
+        """A cohort's idle jobs in FIFO (submission) order.  Insertion
+        order already IS submission order unless a released job re-entered
+        behind newer ones — then ONE sort is paid and the cohort dict is
+        rebuilt in order (flag + tail reset), restoring the O(n) fast
+        path for subsequent cycles."""
+        cohort = self._idle_cohorts.get(key)
+        if not cohort:
+            return []
+        if key not in self._cohort_unsorted:
+            return list(cohort.values())
+        jobs = sorted(cohort.values(),
+                      key=lambda j: (j.submitted_at, j.jid))
+        self._idle_cohorts[key] = {j.jid: j for j in jobs}
+        self._cohort_unsorted.discard(key)
+        last = jobs[-1]
+        self._cohort_tail[key] = (last.submitted_at, last.jid)
+        return jobs
 
     def get(self, jid: int) -> Job:
         return self._jobs[jid]
@@ -82,7 +185,8 @@ class JobQueue:
     def claim(self, jid: int, worker_name: str, now: float) -> Job:
         job = self._jobs[jid]
         assert job.state == JobState.IDLE, (jid, job.state)
-        job.state = JobState.RUNNING
+        self._leave_state(job)
+        self._enter_state(job, JobState.RUNNING)
         job.claimed_by = worker_name
         job.attempt_started_at = now
         if job.started_at < 0:
@@ -91,6 +195,7 @@ class JobQueue:
 
     def complete(self, jid: int, now: float):
         job = self._jobs.pop(jid)
+        self._leave_state(job)
         job.state = JobState.COMPLETED
         job.completed_at = now
         job.claimed_by = None
@@ -112,15 +217,16 @@ class JobQueue:
             kept = (done // ckpt_every) * ckpt_every if ckpt_every else 0.0
             job.wasted_s += done - kept
             job.remaining_s = job.runtime_s - kept
-        job.state = JobState.IDLE
+        self._leave_state(job)
+        self._enter_state(job, JobState.IDLE)
         job.claimed_by = None
 
     # -- stats ----------------------------------------------------------------
     def n_idle(self) -> int:
-        return len(self.idle_jobs())
+        return len(self._by_state[JobState.IDLE])
 
     def n_running(self) -> int:
-        return len(self.jobs(JobState.RUNNING))
+        return len(self._by_state[JobState.RUNNING])
 
     def drained(self) -> bool:
         return not self._jobs

@@ -17,17 +17,45 @@ from typing import Any
 
 @dataclasses.dataclass
 class Recorder:
+    """Gauge time-series store.
+
+    Sampling cadence is the CALLER's business (the event engine installs
+    its own periodic metrics callback; see simulation.py); as a guard for
+    tick-loop callers that record every step, an optional
+    `sample_interval_s` rate-limits aggregate samples so recording cost is
+    decoupled from tick cadence at 100k-job scale."""
+
     series: dict[str, list[tuple[float, float]]] = dataclasses.field(
         default_factory=dict)
+    sample_interval_s: float | None = None
+    _last_sample: float = dataclasses.field(default=-1e18, repr=False)
+
+    def _sample_ok(self, now: float) -> bool:
+        """Shared rate-limit gate: aggregate and per-backend series stay
+        on the SAME sample grid (a timestamp either records everywhere or
+        nowhere)."""
+        if self.sample_interval_s is None:
+            return True
+        if now == self._last_sample:      # same instant as an accepted one
+            return True
+        if now - self._last_sample >= self.sample_interval_s - 1e-9:
+            self._last_sample = now
+            return True
+        return False
 
     def record(self, now: float, **gauges: float):
+        if not self._sample_ok(now):
+            return
         for key, val in gauges.items():
             self.series.setdefault(key, []).append((now, float(val)))
 
     # -- per-backend series (federation) -----------------------------------
     def record_backend(self, now: float, backend: str, **gauges: float):
         """Record gauges attributed to one scaling backend; stored under
-        ``key@backend`` so aggregate keys stay untouched."""
+        ``key@backend`` so aggregate keys stay untouched.  Honours the
+        same sampling grid as `record`."""
+        if not self._sample_ok(now):
+            return
         for key, val in gauges.items():
             self.series.setdefault(f"{key}@{backend}", []).append(
                 (now, float(val)))

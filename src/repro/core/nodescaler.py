@@ -17,7 +17,7 @@ import dataclasses
 import itertools
 from typing import Any
 
-from repro.core.cluster import KubeCluster, Node, PodPhase
+from repro.core.cluster import KubeCluster, Node
 
 
 @dataclasses.dataclass
@@ -150,10 +150,7 @@ class NodeAutoscaler:
         for name in list(self.cluster.nodes):
             if not name.startswith(self.prefix):
                 continue
-            running = [
-                p for p in self.cluster.pods.values()
-                if p.node == name and p.phase == PodPhase.RUNNING
-            ]
+            running = self.cluster.pods_on_node(name)
             if running:
                 self._empty_since.pop(name, None)
                 continue

@@ -1,17 +1,31 @@
-"""Discrete-time simulation harness wiring all control-plane components.
+"""Event-driven simulation harness wiring all control-plane components.
 
 One `Simulation` owns: JobQueue (schedd), Collector (pool), N
 `ScalingBackend`s (each a KubeCluster + optional NodeAutoscaler + cost
 model), Provisioner, optional fault injectors, and a Recorder.
-`run(until)` advances in fixed ticks; each tick:
 
-  1. external events (job arrivals, spot reclaims) fire
-  2. provisioner reconciles (at its own interval)  — C1/C3/C4
-  3. each backend ticks: node autoscaler (C7), kube scheduler
-     (priorities/preemption, §5), cost accounting
-  4. negotiator matches idle jobs to ready workers
-  5. workers advance claimed jobs; self-terminate when idle — C2
-  6. metrics are recorded (aggregate + per-backend series)
+The core is a discrete-event `EventLoop` (core/events.py).  Control-plane
+activities are periodic callbacks at their EXACT cadence — no tick
+quantization, no `last = now` drift:
+
+  priority 0   external events (job arrivals, spot reclaims, failures)
+  priority 10  provisioner reconcile, every submit_interval_s — C1/C3/C4
+  priority 20  per-backend tick: node autoscaler (C7), kube scheduler
+               (priorities/preemption, §5), cost accounting
+  priority 30  negotiator matches idle-job cohorts to workers
+  priority 40  straggler mitigation (beyond-paper)
+  priority 50  metrics sampling (own cadence, decoupled from tick_s)
+
+Between events, continuous state — running jobs, worker busy/alive time —
+is integrated lazily: before ANY event fires, `_advance_to(t)` advances
+the workers to exactly `t`, so a spot reclaim at t=12.5 sees job progress
+up to 12.5 and completions land at their exact finish times (C2 wakeups).
+
+Compatibility: `tick_s`, `step()`, and `run(until)` keep their seed
+meaning (a step advances one tick's worth of events).  `engine="tick"`
+retains the seed's fixed-tick O(n)-scan loop verbatim — it is the
+baseline for benchmarks/bench_event_engine.py and the oracle for
+differential tests.
 
 Single-backend compatibility: the seed constructor signature
 (`nodes=`, `node_template=`, `max_nodes=`) still works — it is adapted
@@ -33,10 +47,11 @@ from typing import Any, Callable, Iterable
 import numpy as np
 
 from repro.core.backend import (
-    FederatedClusterView, KubeBackend, build_backends,
+    FederatedClusterView, KubeBackend, build_backends, schedule_backend_on,
 )
 from repro.core.cluster import KubeCluster, Node
 from repro.core.config import ProvisionerConfig
+from repro.core.events import EventLoop
 from repro.core.jobqueue import Job, JobQueue
 from repro.core.metrics import (
     Recorder, summarize_backends, summarize_jobs, summarize_workers,
@@ -45,6 +60,14 @@ from repro.core.nodescaler import NodeAutoscaler, NodeTemplate
 from repro.core.provisioner import Provisioner
 from repro.core.stragglers import StragglerPolicy
 from repro.core.worker import Collector, advance_workers
+
+# same-timestamp ordering, mirroring the seed's intra-tick sequence
+P_EXTERNAL = 0
+P_RECONCILE = 10
+P_BACKEND = 20
+P_NEGOTIATE = 30
+P_STRAGGLER = 40
+P_METRICS = 50
 
 
 @dataclasses.dataclass
@@ -65,12 +88,18 @@ class Simulation:
         backends: list | None = None,
         tick_s: float = 5.0,
         negotiate_interval_s: float = 15.0,
+        metrics_interval_s: float | None = None,
         seed: int = 0,
         straggler_policy: StragglerPolicy | None = None,
+        engine: str = "event",
     ):
+        if engine not in ("event", "tick"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.engine = engine
         self.cfg = cfg
         self.tick_s = tick_s
         self.negotiate_interval_s = negotiate_interval_s
+        self.metrics_interval_s = metrics_interval_s or tick_s
         self.queue = JobQueue()
         self.collector = Collector()
         if backends is None:
@@ -90,9 +119,10 @@ class Simulation:
         )
         self.straggler_policy = straggler_policy
         self.recorder = Recorder()
-        self.events: list[TimedEvent] = []
+        self.events: list[TimedEvent] = []      # tick engine's flat list
         self.now = 0.0
-        self._last_negotiate = -1e18
+        self._last_negotiate = -1e18            # tick engine (drifts; see
+        #                                         event engine for the fix)
         self.rng = np.random.default_rng(seed)
         self.all_workers: list = []  # includes terminated (for accounting)
 
@@ -106,6 +136,79 @@ class Simulation:
             return w
 
         self.provisioner.worker_factory = tracking_factory
+
+        self.loop = EventLoop()
+        self._advanced_until = 0.0
+        self._external_pending = 0
+        if engine == "event":
+            self._install_periodics()
+
+    def _install_periodics(self):
+        """Exact-cadence control-plane callbacks (the seed polled these
+        every tick, accumulating up to tick_s of drift per period)."""
+        self.provisioner.schedule_on(self.loop, first=0.0,
+                                     priority=P_RECONCILE)
+        for backend in self.backends:
+            register = getattr(backend, "schedule_on", None)
+            if register is not None:
+                register(self.loop, self.tick_s, priority=P_BACKEND)
+            else:
+                # foreign ScalingBackend without the event-loop hook
+                schedule_backend_on(backend, self.loop, self.tick_s,
+                                    priority=P_BACKEND)
+        self.loop.every(
+            self.negotiate_interval_s, self._negotiate_cb,
+            first=0.0, name="negotiate", priority=P_NEGOTIATE)
+        if self.straggler_policy is not None:
+            self.loop.every(
+                self.tick_s, self._straggler_cb,
+                first=self.tick_s, name="stragglers", priority=P_STRAGGLER)
+        self.loop.every(
+            self.metrics_interval_s, self._record_cb,
+            first=0.0, name="metrics", priority=P_METRICS)
+
+    # -- periodic callbacks (event engine) -----------------------------------
+    def _negotiate_cb(self, now: float):
+        self._last_negotiate = now
+        self.collector.negotiate(self.queue, now)
+
+    def _straggler_cb(self, now: float):
+        self.straggler_policy.tick(self.queue, self.collector,
+                                   self.cluster_view, now)
+
+    def _record_cb(self, now: float):
+        self.recorder.record(
+            now,
+            idle_jobs=self.queue.n_idle(),
+            running_jobs=self.queue.n_running(),
+            pending_pods=len(self.cluster_view.pending_pods()),
+            running_pods=len(self.cluster_view.running_pods()),
+            ready_workers=len(self.collector.alive_workers(now)),
+            busy_workers=sum(
+                1 for w in self.collector.workers.values() if w.claimed
+            ),
+            live_nodes=sum(len(b.cluster.nodes) for b in self.backends),
+            cost_rate=sum(b.cost_rate() for b in self.backends),
+        )
+        if len(self.backends) > 1:
+            for b in self.backends:
+                self.recorder.record_backend(
+                    now, b.name,
+                    pending_pods=b.pending(None),
+                    live_pods=b.live_pods(),
+                    live_nodes=len(b.cluster.nodes),
+                    cost_rate=b.cost_rate(),
+                )
+
+    def _advance_to(self, t: float):
+        """Integrate continuous state (running jobs, worker clocks) up to
+        exactly `t` — called before every event fires."""
+        if t <= self._advanced_until:
+            return
+        dt = t - self._advanced_until
+        advance_workers(self.collector, self.queue, self.cluster_view,
+                        self._advanced_until, dt)
+        self._advanced_until = t
 
     @classmethod
     def from_config(cls, cfg: ProvisionerConfig, **kw) -> "Simulation":
@@ -121,7 +224,21 @@ class Simulation:
     # -- event helpers -------------------------------------------------------
     def at(self, t: float, fn: Callable[["Simulation", float], None],
            name: str = ""):
-        self.events.append(TimedEvent(t, fn, name))
+        """Schedule an external event; under the event engine it fires at
+        EXACTLY `t` (the seed fired it at the first tick >= t).  A time
+        at or before `now` fires as soon as the clock next advances —
+        the seed accepted late events the same way."""
+        if self.engine == "tick":
+            self.events.append(TimedEvent(t, fn, name))
+            return
+        self._external_pending += 1
+
+        def fire(now: float):
+            self._external_pending -= 1
+            fn(self, now)
+
+        self.loop.schedule(max(t, self.loop.now), fire, name=name,
+                           priority=P_EXTERNAL)
 
     def submit_jobs(self, t: float, jobs: Iterable[Job]):
         jobs = list(jobs)
@@ -186,9 +303,20 @@ class Simulation:
 
     # -- main loop --------------------------------------------------------------
     def step(self):
+        """Advance one tick's worth of simulated time (compat shim; the
+        event engine fires every event in (now, now+tick_s] exactly)."""
+        if self.engine == "tick":
+            self._step_tick()
+        else:
+            self.run(self.now + self.tick_s)
+
+    def _step_tick(self):
+        """The seed's fixed-tick loop, kept verbatim as the benchmark
+        baseline: O(events) scan, per-job negotiation, drifting cadences,
+        tick-quantized event firing."""
         now, dt = self.now, self.tick_s
 
-        # 1. external events
+        # 1. external events (fire up to tick_s late; see event engine)
         due = [e for e in self.events if e.at <= now]
         self.events = [e for e in self.events if e.at > now]
         for e in sorted(due, key=lambda e: e.at):
@@ -197,18 +325,23 @@ class Simulation:
         # 2. provisioner
         self.provisioner.maybe_reconcile(now)
 
-        # 3. backends: autoscale, schedule, account (C7 + §5)
+        # 3. backends: autoscale, schedule, account (C7 + §5).  The seed
+        #    integrated [now, now+dt] forward; with lazy accounting that
+        #    means bringing the integrals up to the interval END.
         for backend in self.backends:
             backend.tick(now, dt)
+            backend.cluster.tick_accounting(0.0, now + dt)
 
-        # 4. negotiation
+        # 4. negotiation (last = now accumulates drift when the interval
+        #    is not a multiple of tick_s — the event engine fixes this)
         if now - self._last_negotiate >= self.negotiate_interval_s:
-            self.collector.negotiate(self.queue, now)
+            self.collector.negotiate_scan(self.queue, now)
             self._last_negotiate = now
 
-        # 5. workers advance
+        # 5. workers advance (per-job idle polling, tick-quantized
+        #    completions — the seed's exact semantics)
         advance_workers(self.collector, self.queue, self.cluster_view,
-                        now, dt)
+                        now, dt, scan_matches=True, exact_completions=False)
 
         # 5b. straggler mitigation (beyond-paper; see core/stragglers.py)
         if self.straggler_policy is not None:
@@ -216,41 +349,54 @@ class Simulation:
                                        self.cluster_view, now)
 
         # 6. metrics
-        self.recorder.record(
-            now,
-            idle_jobs=self.queue.n_idle(),
-            running_jobs=self.queue.n_running(),
-            pending_pods=len(self.cluster_view.pending_pods()),
-            running_pods=len(self.cluster_view.running_pods()),
-            ready_workers=len(self.collector.alive_workers(now)),
-            busy_workers=sum(
-                1 for w in self.collector.workers.values() if w.claimed
-            ),
-            live_nodes=sum(len(b.cluster.nodes) for b in self.backends),
-            cost_rate=sum(b.cost_rate() for b in self.backends),
-        )
-        if len(self.backends) > 1:
-            for b in self.backends:
-                self.recorder.record_backend(
-                    now, b.name,
-                    pending_pods=b.pending(None),
-                    live_pods=b.live_pods(),
-                    live_nodes=len(b.cluster.nodes),
-                    cost_rate=b.cost_rate(),
-                )
+        self._record_cb(now)
         self.now += dt
 
     def run(self, until: float):
-        while self.now < until:
-            self.step()
+        if self.engine == "tick":
+            while self.now < until:
+                self._step_tick()
+            self._flush_accounting()
+            return
+        if until <= self.now:
+            return
+        self.loop.run_until(until, pre=self._advance_to)
+        self._advance_to(until)
+        self.now = until
+        self._flush_accounting()
 
     def run_until_drained(self, max_t: float = 1e6):
-        while ((self.events or not self.queue.drained())
+        if self.engine == "tick":
+            while ((self.events or not self.queue.drained())
+                   and self.now < max_t):
+                self._step_tick()
+            self._flush_accounting()
+            return
+        while ((self._external_pending > 0 or not self.queue.drained())
                and self.now < max_t):
-            self.step()
+            t = self.loop.next_at()
+            if t is None or t > max_t:
+                self.run(max_t)
+                break
+            self._advance_to(t)
+            self.loop.fire_next()
+            self.now = self.loop.now
+        self._flush_accounting()
+
+    def _flush_accounting(self):
+        """Bring every backend's lazy node integrals AND cost accrual up
+        to `self.now` — run()/run_until_drained() can stop between
+        backend ticks, and the summary must not read integrals stale by
+        a partial tick (or miss the final partial interval's cost)."""
+        for b in self.backends:
+            b.cluster.tick_accounting(0.0, self.now)
+            accrue = getattr(b, "accrue_cost", None)
+            if accrue is not None:
+                accrue(self.now)
 
     # -- summaries -----------------------------------------------------------------
     def summary(self) -> dict[str, Any]:
+        self._flush_accounting()
         out: dict[str, Any] = {}
         out["jobs"] = summarize_jobs(self.queue.completed_log, self.now)
         out["workers"] = summarize_workers(self.all_workers)

@@ -16,6 +16,15 @@ The collector is the pool registry; `negotiate()` is a single matchmaking
 cycle pairing idle jobs with unclaimed worker capacity (symmetric_match:
 job.Requirements against the worker ad AND the worker START against the
 job ad).
+
+Scale: `negotiate()` is vectorized over the queue's idle COHORTS
+(jobqueue.py) — jobs with identical ads share one ClassAd evaluation per
+worker, and how many cohort jobs fit each worker comes from a NumPy
+free-resource matrix instead of per-job Python loops.  Expression results
+for unclaimed workers are memoized in the collector (pure functions of
+the two ads), which also makes the C2 idle poll in `advance_workers` a
+cohort-count scan.  `negotiate_scan()` keeps the seed's per-job loop as
+the differential-test oracle and the benchmark baseline.
 """
 from __future__ import annotations
 
@@ -23,8 +32,29 @@ import dataclasses
 import itertools
 from typing import Any
 
+import numpy as np
+
 from repro.core.classad import ClassAdExpr, symmetric_match
-from repro.core.jobqueue import Job, JobQueue, JobState
+from repro.core.jobqueue import Job, JobQueue, JobState, canonical_ad
+
+RESOURCE_KEYS = ("cpus", "gpus", "memory", "disk", "chips", "hbm_gb")
+# offer-ad attributes whose values shrink as a slot fills; expressions
+# reading them cannot be block-evaluated once per negotiation cycle
+_QUANTITY_ATTRS = frozenset(RESOURCE_KEYS)
+
+
+def _num(v: Any) -> float:
+    return float(v) if isinstance(v, (int, float)) else 0.0
+
+
+def _job_req_vec(job: Job) -> np.ndarray:
+    """Job request over RESOURCE_KEYS, cached on the job (ads are fixed)."""
+    v = getattr(job, "_req_vec", None)
+    if v is None:
+        v = np.array([_num(job.ad.get(f"request_{r}"))
+                      for r in RESOURCE_KEYS], dtype=np.float64)
+        job._req_vec = v
+    return v
 
 
 @dataclasses.dataclass
@@ -44,14 +74,49 @@ class Worker:
     # accounting
     busy_s: float = 0.0
     alive_s: float = 0.0
+    _match_key: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _res_vec: Any = dataclasses.field(default=None, repr=False,
+                                      compare=False)
+    _used_vec: Any = dataclasses.field(default=None, repr=False,
+                                       compare=False)
 
     def ready(self, now: float) -> bool:
         return self.booted_at >= 0 and now >= self.booted_at and not self.terminated
 
+    # -- incremental resource vectors (hot path of the negotiator) -----------
+    def res_vec(self) -> np.ndarray:
+        if self._res_vec is None:
+            self._res_vec = np.array(
+                [_num(self.ad.get(r)) for r in RESOURCE_KEYS],
+                dtype=np.float64)
+        return self._res_vec
+
+    def free_vec(self) -> np.ndarray:
+        if self._used_vec is None:
+            return self.res_vec().copy()
+        return self.res_vec() - self._used_vec
+
+    def add_claim(self, job: Job):
+        self.claimed[job.jid] = job
+        if self._used_vec is None:
+            self._used_vec = np.zeros(len(RESOURCE_KEYS), dtype=np.float64)
+        self._used_vec += _job_req_vec(job)
+
+    def drop_claim(self, jid: int) -> Job | None:
+        job = self.claimed.pop(jid, None)
+        if job is not None and self._used_vec is not None:
+            self._used_vec -= _job_req_vec(job)
+        return job
+
+    def clear_claims(self):
+        self.claimed.clear()
+        self._used_vec = None
+
     def free_resources(self) -> dict[str, float]:
         free = dict(self.ad)
         for job in self.claimed.values():
-            for res in ("cpus", "gpus", "memory", "disk", "chips", "hbm_gb"):
+            for res in RESOURCE_KEYS:
                 want = job.ad.get(f"request_{res}", 0) or 0
                 if res in free and isinstance(free[res], (int, float)):
                     free[res] = free[res] - want
@@ -61,13 +126,27 @@ class Worker:
         """Current (partial-slot) offer: remaining resources + attrs."""
         return self.free_resources()
 
+    def match_key(self) -> tuple:
+        """Matchmaking-equivalence key of the FULL slot (ads are fixed at
+        provisioning time, so this is computed once).  Uses the same ad
+        canonicalization as the job-side cohort_key_of — the two halves
+        jointly key the collector's match cache."""
+        if self._match_key is None:
+            self._match_key = (self.start_expr.src, canonical_ad(self.ad))
+        return self._match_key
+
 
 class Collector:
     """Pool registry + negotiator."""
 
+    MATCH_CACHE_MAX = 100_000    # entries; reset-on-full (pure cache)
+
     def __init__(self):
         self.workers: dict[str, Worker] = {}
         self._ids = itertools.count()
+        # (job cohort, worker slot shape) -> bool; symmetric_match is a
+        # pure function of the two ads, so entries never invalidate
+        self._match_cache: dict[tuple, bool] = {}
 
     def advertise(self, worker: Worker):
         self.workers[worker.name] = worker
@@ -89,11 +168,116 @@ class Collector:
                 n += 1
         return n
 
-    def negotiate(self, queue: JobQueue, now: float) -> int:
-        """One matchmaking cycle. Returns number of new claims.
+    # -- cohort-level matchmaking -------------------------------------------
+    def cohort_match(self, rep: Job, worker: Worker) -> bool:
+        """Would `worker`'s slot match this cohort? Evaluated against the
+        live offer for partially-claimed workers; memoized for unclaimed
+        ones (offer == full ad)."""
+        if worker.claimed:
+            return symmetric_match(rep.ad, worker.offer_ad(),
+                                   rep.requirements, worker.start_expr)
+        key = (rep.cohort_key, worker.match_key())
+        hit = self._match_cache.get(key)
+        if hit is None:
+            hit = symmetric_match(rep.ad, worker.ad, rep.requirements,
+                                  worker.start_expr)
+            if len(self._match_cache) >= self.MATCH_CACHE_MAX:
+                # pathological per-job cohorts (e.g. trace replay with
+                # unique ads): stop the memo growing without bound
+                self._match_cache.clear()
+            self._match_cache[key] = hit
+        return hit
 
-        Workers with no free capacity drop out of the candidate list as
-        they fill — keeps a full-pool cycle O(idle × free_workers)."""
+    def any_cohort_matches(self, worker: Worker, queue: JobQueue) -> bool:
+        """C2 idle poll: does ANY idle job match this worker? One check
+        per cohort, cache-hit for the common (idle worker) case."""
+        for _key, jobs in queue.idle_cohorts():
+            rep = next(iter(jobs.values()))
+            if self.cohort_match(rep, worker):
+                return True
+        return False
+
+    def negotiate(self, queue: JobQueue, now: float) -> int:
+        """One vectorized matchmaking cycle. Returns number of new claims.
+
+        Cohorts are served earliest-submitter-first; per cohort, a NumPy
+        mask over the worker free-resource matrix yields how many cohort
+        jobs each candidate can absorb, and claims are handed out in
+        worker advertisement order (the seed's first-match rule).
+
+        FIFO is COHORT-granular: the cohort holding the oldest idle job
+        drains before newer cohorts see capacity, like HTCondor's
+        autocluster-batched negotiation.  Under scarce capacity this can
+        differ from `negotiate_scan`'s per-job interleaving (a later job
+        of the oldest cohort may beat an earlier job of a newer one) —
+        the price of evaluating matchmaking once per cohort instead of
+        once per job."""
+        if not hasattr(queue, "idle_cohorts"):
+            # foreign queue exposing only the seed surface: per-job scan
+            # (mirrors Provisioner._idle_group_counts' fallback)
+            return self.negotiate_scan(queue, now)
+        cohorts = [(key, jobs) for key, jobs in queue.idle_cohorts() if jobs]
+        if not cohorts:
+            return 0
+        workers = self.alive_workers(now)
+        if not workers:
+            return 0
+        free = np.stack([w.free_vec() for w in workers])
+        cohorts.sort(key=lambda kv: queue.cohort_first_submit(kv[0]))
+        claims = 0
+        for key, jobs in cohorts:
+            rep = next(iter(jobs.values()))
+            want = _job_req_vec(rep)
+            pos = want > 0
+            if pos.any():
+                # +eps before floor: 7.6/0.4 is 18.999...96 in floats and
+                # must count as 19 slots (the scan oracle's arithmetic
+                # never divides, so it would claim that job)
+                fits = np.floor(
+                    (free[:, pos] / want[pos]).min(axis=1) + 1e-9)
+                fits = np.maximum(fits, 0.0)
+            else:
+                # a zero-request cohort fits anywhere (bounded by demand)
+                fits = np.full(len(workers), float(len(jobs)))
+            if fits.sum() <= 0:
+                continue
+            pending = queue.cohort_jobs_sorted(key)
+            # A START/Requirements expression that reads offered QUANTITIES
+            # (e.g. 'gpus >= 2') must be re-evaluated against the shrinking
+            # offer after every claim — block-claiming is only exact for
+            # quantity-blind policies (the common pushed-down filters).
+            per_claim_check = bool(
+                (rep.requirements.refs if rep.requirements is not None
+                 else frozenset()) & _QUANTITY_ATTRS)
+            ji = 0
+            for wi, w in enumerate(workers):
+                if ji >= len(pending):
+                    break
+                k = int(fits[wi])
+                if k <= 0:
+                    continue
+                if not self.cohort_match(rep, w):
+                    continue
+                recheck = per_claim_check or bool(
+                    w.start_expr.refs & _QUANTITY_ATTRS)
+                take = min(k, len(pending) - ji)
+                taken = 0
+                for job in pending[ji:ji + take]:
+                    if recheck and taken > 0 and not self.cohort_match(
+                            rep, w):
+                        break
+                    queue.claim(job.jid, w.name, now)
+                    w.add_claim(job)
+                    taken += 1
+                w.idle_since = -1.0
+                free[wi] -= want * taken
+                ji += taken
+                claims += taken
+        return claims
+
+    def negotiate_scan(self, queue: JobQueue, now: float) -> int:
+        """The seed's per-job O(idle × workers) cycle — kept verbatim as
+        the tick-engine baseline and the oracle for differential tests."""
         claims = 0
         idle = sorted(queue.idle_jobs(), key=lambda j: j.submitted_at)
         candidates = list(self.alive_workers(now))
@@ -109,7 +293,7 @@ class Collector:
             if matched is None:
                 continue
             queue.claim(job.jid, matched.name, now)
-            matched.claimed[job.jid] = job
+            matched.add_claim(job)
             matched.idle_since = -1.0
             claims += 1
             free = matched.free_resources()
@@ -129,48 +313,89 @@ def advance_workers(
     cluster,
     now: float,
     dt: float,
+    *,
+    scan_matches: bool = False,
+    exact_completions: bool = True,
 ) -> list[str]:
-    """Advance all workers by dt: run claimed jobs, complete them, start the
-    idle-timeout clock, self-terminate (C2).  Returns names of workers that
-    self-terminated this tick."""
+    """Advance all workers over [now, now+dt]: run claimed jobs, complete
+    them AT THEIR EXACT FINISH TIME (not quantized to the interval end),
+    start the idle-timeout clock, self-terminate (C2).  Returns names of
+    workers that self-terminated.
+
+    `scan_matches=True` / `exact_completions=False` together reproduce
+    the seed tick loop verbatim (per-job C2 idle poll, completions
+    quantized to now+dt, no mid-interval boot credit) — the tick-engine
+    baseline; the defaults are the event engine's exact semantics."""
+    t1 = now + dt
     terminated = []
     for w in list(collector.workers.values()):
-        if w.terminated:
-            continue
-        if not w.ready(now):
-            continue
-        w.alive_s += dt
+        if exact_completions:
+            if w.terminated or w.booted_at < 0 or w.booted_at >= t1:
+                continue
+            seg0 = max(now, w.booted_at)
+            seg = t1 - seg0
+            if seg <= 0:
+                continue
+        else:                      # seed: whole ticks, gated at tick start
+            if w.terminated or not w.ready(now):
+                continue
+            seg0, seg = now, dt
+        w.alive_s += seg
+        idle_from = seg0         # idleness cannot predate the boot
         if w.claimed:
-            w.busy_s += dt
-        # advance claimed jobs
-        for jid, job in list(w.claimed.items()):
-            if job.work_fn is not None:
-                done = job.work_fn(job, dt)
-            else:
-                job.remaining_s -= dt * w.work_rate
-                done = job.remaining_s <= 1e-9
-            if done:
-                queue.complete(jid, now + dt)
-                w.claimed.pop(jid)
+            busy_until = seg0
+            for jid, job in list(w.claimed.items()):
+                if job.work_fn is not None:
+                    done = job.work_fn(job, seg)
+                    t_done = t1
+                elif exact_completions:
+                    rate = w.work_rate
+                    need = (job.remaining_s / rate if rate > 0
+                            else float("inf"))
+                    if need <= seg + 1e-9:
+                        job.remaining_s = 0.0
+                        done = True
+                        t_done = min(seg0 + need, t1)
+                    else:
+                        job.remaining_s -= seg * rate
+                        done = False
+                        t_done = t1
+                else:               # seed: progress and finish in dt units
+                    job.remaining_s -= dt * w.work_rate
+                    done = job.remaining_s <= 1e-9
+                    t_done = t1
+                if done:
+                    queue.complete(jid, t_done)
+                    w.drop_claim(jid)
+                busy_until = max(busy_until, t_done)
+            w.busy_s += (busy_until - seg0 if exact_completions else dt)
+            if not w.claimed and exact_completions:
+                idle_from = busy_until   # idle clock starts at the EXACT
+                #                          last-completion time, not the
+                #                          segment start
         if w.claimed:
             w.idle_since = -1.0
             continue
         # idle: does any matching idle job exist? (C2 poll)
-        has_match = any(
-            symmetric_match(j.ad, w.offer_ad(), j.requirements, w.start_expr)
-            for j in queue.idle_jobs()
-        )
+        if scan_matches:
+            has_match = any(
+                symmetric_match(j.ad, w.offer_ad(), j.requirements,
+                                w.start_expr)
+                for j in queue.idle_jobs()
+            )
+        else:
+            has_match = collector.any_cohort_matches(w, queue)
         if has_match:
             w.idle_since = -1.0  # negotiator will claim next cycle
             continue
         if w.idle_since < 0:
-            w.idle_since = now
-        elif now + dt - w.idle_since >= w.idle_timeout:
+            w.idle_since = idle_from
+        elif t1 - w.idle_since >= w.idle_timeout:
             w.terminated = True
             terminated.append(w.name)
             collector.invalidate(w.name)
             if w.pod_name is not None and cluster is not None:
-                cluster.succeed_pod(w.pod_name, now + dt)
+                cluster.succeed_pod(w.pod_name, t1)
     return terminated
 
 
@@ -183,6 +408,6 @@ def kill_worker(collector: Collector, queue: JobQueue, worker_name: str,
         return
     for jid in list(w.claimed):
         queue.release(jid, now, preempted=True)
-    w.claimed.clear()
+    w.clear_claims()
     w.terminated = True
     collector.invalidate(worker_name)

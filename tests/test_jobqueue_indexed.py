@@ -1,0 +1,149 @@
+"""Indexed JobQueue invariants (hypothesis property tests).
+
+The queue keeps three views of the same jobs — the flat registry,
+per-state buckets, and idle cohorts.  Arbitrary submit/claim/release/
+complete sequences must keep them consistent, keep `preempt_count` /
+`wasted_s` monotone, and keep checkpoint-truncated restart accounting
+exact."""
+import pytest
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import Job, JobQueue, JobState
+from repro.core.jobqueue import cohort_key_of
+
+AD_CHOICES = [
+    {"request_cpus": 1, "request_gpus": 1, "request_memory": 4},
+    {"request_cpus": 2, "request_gpus": 0, "request_memory": 8},
+    {"request_cpus": 1, "request_gpus": 1, "request_memory": 4,
+     "arch": "gpu"},
+    {"request_cpus": 4, "request_gpus": 2, "request_memory": 16,
+     "checkpoint_interval_s": 30.0},
+]
+
+# an op is (kind, job_selector, dt) — selectors index into live jobs
+OPS = st.lists(
+    st.tuples(
+        st.sampled_from(["submit", "claim", "run", "release", "complete"]),
+        st.integers(0, 7),
+        st.floats(1.0, 200.0),
+    ),
+    min_size=1, max_size=60,
+)
+
+
+def check_indexes(q: JobQueue):
+    """Every index agrees with the flat registry."""
+    by_state: dict = {}
+    for j in q.jobs():
+        by_state.setdefault(j.state, []).append(j.jid)
+    for state in JobState:
+        want = sorted(by_state.get(state, []))
+        got = sorted(j.jid for j in q.jobs(state))
+        assert got == want, (state, got, want)
+    assert q.n_idle() == len(by_state.get(JobState.IDLE, []))
+    assert q.n_running() == len(by_state.get(JobState.RUNNING, []))
+    # cohorts partition the idle set, and members share the key
+    seen = []
+    for key, jobs in q.idle_cohorts():
+        assert jobs, "empty cohort left in index"
+        for j in jobs.values():
+            assert j.state == JobState.IDLE
+            assert j.cohort_key == key == cohort_key_of(j)
+            seen.append(j.jid)
+    assert sorted(seen) == sorted(by_state.get(JobState.IDLE, []))
+    # sorted-view really is FIFO
+    for key, _jobs in q.idle_cohorts():
+        order = [(j.submitted_at, j.jid) for j in q.cohort_jobs_sorted(key)]
+        assert order == sorted(order)
+
+
+@settings(max_examples=80, deadline=None)
+@given(OPS)
+def test_random_lifecycles_preserve_queue_invariants(ops):
+    q = JobQueue()
+    now = 0.0
+    monotone: dict[int, tuple[int, float]] = {}  # jid -> (preempts, wasted)
+    for kind, sel, dt in ops:
+        now += 1.0
+        live = q.jobs()
+        if kind == "submit" or not live:
+            ad = dict(AD_CHOICES[sel % len(AD_CHOICES)])
+            q.submit(Job(ad=ad, runtime_s=60.0 + sel * 10), now)
+        else:
+            j = live[sel % len(live)]
+            if kind == "claim" and j.state == JobState.IDLE:
+                q.claim(j.jid, f"w{sel}", now)
+            elif kind == "run" and j.state == JobState.RUNNING:
+                j.remaining_s = max(0.0, j.remaining_s - dt)
+            elif kind == "release" and j.state == JobState.RUNNING:
+                q.release(j.jid, now, preempted=True)
+            elif kind == "complete" and j.state == JobState.RUNNING:
+                q.complete(j.jid, now)
+        check_indexes(q)
+        for j in q.jobs() + q.completed_log:
+            prev = monotone.get(j.jid, (0, 0.0))
+            assert j.preempt_count >= prev[0]
+            assert j.wasted_s >= prev[1] - 1e-9
+            assert j.remaining_s <= j.runtime_s + 1e-9
+            monotone[j.jid] = (j.preempt_count, j.wasted_s)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(10.0, 500.0), st.floats(5.0, 120.0), st.floats(0.0, 1.0))
+def test_checkpoint_truncated_restart_accounting(runtime, ckpt, frac):
+    """Releasing a job that did `done` work keeps only whole checkpoint
+    intervals: remaining == runtime - floor(done/ckpt)*ckpt, and the tail
+    past the last boundary is counted as waste."""
+    q = JobQueue()
+    q.submit(Job(ad={"request_gpus": 1, "checkpoint_interval_s": ckpt},
+                 runtime_s=runtime), 0.0)
+    (j,) = q.idle_jobs()
+    q.claim(j.jid, "w0", 0.0)
+    done = runtime * frac
+    j.remaining_s = runtime - done
+    q.release(j.jid, 100.0, preempted=True)
+    kept = (done // ckpt) * ckpt
+    assert j.state == JobState.IDLE
+    assert j.preempt_count == 1
+    assert abs(j.remaining_s - (runtime - kept)) < 1e-9
+    assert abs(j.wasted_s - (done - kept)) < 1e-9
+    check_indexes(q)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 30), st.integers(0, 29))
+def test_release_returns_job_to_its_cohort(n, pick):
+    q = JobQueue()
+    for i in range(n):
+        q.submit(Job(ad={"request_gpus": 1}, runtime_s=50), float(i))
+    target = q.idle_jobs()[pick % n]
+    q.claim(target.jid, "w0", 40.0)
+    assert q.n_idle() == n - 1
+    q.release(target.jid, 50.0)
+    assert q.n_idle() == n
+    # FIFO restored: the released (older) job sorts back to its slot
+    (key,) = [k for k, _ in q.idle_cohorts()]
+    order = [j.jid for j in q.cohort_jobs_sorted(key)]
+    assert order == sorted(order)
+    check_indexes(q)
+
+
+def test_cohort_keys_separate_on_requirements_and_ads():
+    q = JobQueue()
+    a = Job(ad={"request_gpus": 1}, runtime_s=10)
+    b = Job(ad={"request_gpus": 1}, runtime_s=10)
+    from repro.core.classad import ClassAdExpr
+    c = Job(ad={"request_gpus": 1}, runtime_s=10,
+            requirements=ClassAdExpr("gpus >= 1"))
+    d = Job(ad={"request_gpus": 2}, runtime_s=10)
+    for j in (a, b, c, d):
+        q.submit(j, 0.0)
+    assert a.cohort_key == b.cohort_key          # identical matchmaking
+    assert a.cohort_key != c.cohort_key          # requirements differ
+    assert a.cohort_key != d.cohort_key          # ad differs
+    assert len(dict(q.idle_cohorts())) == 3
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_shim_active():
+    assert HAVE_HYPOTHESIS
