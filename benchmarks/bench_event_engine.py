@@ -79,6 +79,18 @@ def drain(n_jobs: int, engine: str) -> dict:
     }
 
 
+def run(echo: bool = True) -> dict:
+    """Unified-runner entry (benchmarks.run): 1k-job event-vs-tick
+    comparison, same shape the CI smoke uses."""
+    event = drain(1_000, "event")
+    tick = drain(1_000, "tick")
+    ratio = event["jobs_per_sec"] / max(tick["jobs_per_sec"], 1e-9)
+    payload = {"event": event, "tick": tick, "speedup": round(ratio, 2)}
+    assert ratio >= 5, f"event engine speedup collapsed: {ratio:.1f}x"
+    emit("event_engine", payload, echo=echo)
+    return payload
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--jobs", type=int, default=10_000)

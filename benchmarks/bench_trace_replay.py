@@ -1,0 +1,112 @@
+"""Streaming trace replay at scale: throughput + bounded memory.
+
+Generates an OSG-shaped diurnal trace (workload/generators.py), streams
+it through the standard 3-backend federation with the event engine, and
+reports replay throughput plus the live-`Job` ceiling — the claim that a
+100k-arrival campaign is fed incrementally (jobs exist from arrival to
+completion only), not materialized upfront.
+
+Two modes:
+
+  * default (10k jobs): full diurnal day, cheapest-first policy; records
+    jobs/sec, peak live jobs, conservation of core-hours
+  * CI smoke (--jobs 2000 --budget-s N): wall-clock budget so replay
+    regressions fail the build
+
+Usage:
+    python benchmarks/bench_trace_replay.py [--jobs 10000]
+        [--budget-s SECONDS] [--coalesce-s 10] [--max-live N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import weakref
+
+from benchmarks.common import Timer, emit
+from repro.workload.compare import standard_policy
+from repro.workload.generators import diurnal_day
+from repro.workload.replay import replay_trace
+
+
+def replay_run(n_jobs: int, *, coalesce_s: float = 10.0,
+               duration_s: float = 86400.0, seed: int = 7) -> dict:
+    trace = diurnal_day(n_jobs, seed=seed, duration_s=duration_s)
+    spec = standard_policy("cheapest-first")
+    sim = spec.build()
+
+    state = {"live": 0, "peak": 0}
+
+    def factory(rec):
+        job = rec.to_job()
+        state["live"] += 1
+        state["peak"] = max(state["peak"], state["live"])
+        weakref.finalize(
+            job, lambda: state.__setitem__("live", state["live"] - 1))
+        return job
+
+    rep = replay_trace(sim, iter(trace.records), coalesce_s=coalesce_s,
+                       compact_completed=True, job_factory=factory)
+    with Timer() as t:
+        sim.run_until_drained(max_t=5e6)
+    assert sim.queue.drained(), "replay failed to drain"
+    done = rep.stats.completed
+    assert done.n == n_jobs, (done.n, n_jobs)
+    expect_core_s = trace.total_core_seconds()
+    assert abs(done.core_seconds - expect_core_s) <= 1e-6 * expect_core_s, \
+        "core-hour conservation violated"
+    return {
+        "jobs": n_jobs,
+        "wall_s": round(t.s, 3),
+        "jobs_per_sec": round(n_jobs / t.s, 1),
+        "makespan_s": round(sim.now, 1),
+        "peak_live_jobs": state["peak"],
+        "replay_batches": rep.stats.batches,
+        "coalesce_s": coalesce_s,
+        "p95_wait_s": round(done.summary()["p95_wait_s"], 1),
+        "core_hours": round(done.core_seconds / 3600.0, 2),
+        "cost_total": round(sim.summary()["cost_total"], 2),
+    }
+
+
+def run(echo: bool = True) -> dict:
+    """Unified-runner entry (benchmarks.run): small fixed-size replay."""
+    payload = replay_run(2000, duration_s=14400.0)
+    assert payload["peak_live_jobs"] < 2000, \
+        "streaming replay materialized the whole campaign"
+    emit("trace_replay", payload, echo=echo)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=10_000)
+    ap.add_argument("--duration-s", type=float, default=86400.0)
+    ap.add_argument("--coalesce-s", type=float, default=10.0)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if replay wall time exceeds this")
+    ap.add_argument("--max-live", type=int, default=None,
+                    help="fail if peak live jobs exceeds this")
+    args = ap.parse_args(argv)
+
+    payload = replay_run(args.jobs, coalesce_s=args.coalesce_s,
+                         duration_s=args.duration_s, seed=args.seed)
+    print(f"trace replay: {payload['jobs_per_sec']} jobs/s "
+          f"({payload['wall_s']}s wall), peak live "
+          f"{payload['peak_live_jobs']}/{args.jobs} jobs")
+    emit("trace_replay", payload)
+    if args.budget_s is not None and payload["wall_s"] > args.budget_s:
+        print(f"FAIL: {payload['wall_s']}s > budget {args.budget_s}s",
+              file=sys.stderr)
+        return 1
+    if args.max_live is not None and \
+            payload["peak_live_jobs"] > args.max_live:
+        print(f"FAIL: peak live {payload['peak_live_jobs']} > "
+              f"{args.max_live}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

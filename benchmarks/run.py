@@ -13,8 +13,9 @@ import time
 
 def main():
     from benchmarks import (
-        bench_federation, bench_grouping, bench_kernels, bench_preemption,
-        bench_scaledown, bench_stragglers, bench_tracking,
+        bench_event_engine, bench_federation, bench_grouping,
+        bench_kernels, bench_preemption, bench_scaledown,
+        bench_stragglers, bench_trace_replay, bench_tracking,
         bench_utilization,
     )
 
@@ -22,7 +23,8 @@ def main():
     failures = []
     for mod in (bench_tracking, bench_grouping, bench_preemption,
                 bench_scaledown, bench_stragglers, bench_utilization,
-                bench_federation, bench_kernels):
+                bench_federation, bench_event_engine, bench_trace_replay,
+                bench_kernels):
         name = mod.__name__.split(".")[-1]
         t = time.time()
         try:

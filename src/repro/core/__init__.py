@@ -18,5 +18,7 @@ from repro.core.backend import (
 from repro.core.provisioner import Provisioner
 from repro.core.nodescaler import NodeAutoscaler, NodeTemplate
 from repro.core.simulation import Simulation, gpu_job, onprem_nodes
-from repro.core.metrics import Recorder, summarize_backends
+from repro.core.metrics import (
+    CompletedStats, Recorder, percentile, summarize_backends, timeline,
+)
 from repro.core.stragglers import StragglerPolicy

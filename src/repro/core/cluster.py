@@ -232,20 +232,46 @@ class KubeCluster:
             self._stop_pod(pod, now, "completed")
             self.pods.pop(name, None)
 
+    @staticmethod
+    def _placement_shape(pod: Pod) -> tuple:
+        """Everything placement depends on besides free capacity.  Within
+        one pass, capacity only shrinks between preemption events, so once
+        a shape fails, identical later pods fail too."""
+        return (
+            pod.priority,
+            tuple(sorted(pod.request.items())),
+            pod.tolerations,
+            tuple(sorted((k, str(v)) for k, v in
+                         pod.node_selector.items())),
+        )
+
     def schedule(self, now: float):
         """One scheduling pass: place pending pods (highest priority first,
         FIFO within class); preempt lower-priority pods when allowed.
-        Skipped entirely when nothing changed since the last pass."""
+        Skipped entirely when nothing changed since the last pass.
+
+        A backlog of identical pending pods (the provisioner's common
+        case: one group, hundreds queued) costs ONE failed
+        place+preempt attempt per pass, not one per pod: shapes that
+        failed are skipped for the rest of the pass.  A preemption that
+        frees more than its beneficiary consumes re-dirties the cluster,
+        so skipped pods get their chance next pass."""
         if not self._pending or not self._dirty:
             return
         self._dirty = False
         pending = sorted(
             self.pending_pods(), key=lambda p: (-p.priority, p.created_at)
         )
+        failed: set[tuple] = set()
         for pod in pending:
+            shape = self._placement_shape(pod)
+            if shape in failed:
+                continue
             placed = self._try_place(pod, now)
             if not placed and self.enable_preemption:
-                self._try_preempt(pod, now)
+                placed = self._try_preempt(pod, now)
+            if not placed:
+                failed.add(shape)
 
     def _try_place(self, pod: Pod, now: float) -> bool:
         best: tuple[float, float, Node] | None = None

@@ -81,12 +81,26 @@ def cohort_key_of(job: Job) -> tuple:
 
 class JobQueue:
     """Single schedd. The provisioner and the workers both query it — the
-    workers through the collector's matchmaking (worker.py)."""
+    workers through the collector's matchmaking (worker.py).
+
+    Completion streaming: `add_complete_hook(fn)` registers observers
+    called once per completed job, and `keep_completed = False` stops the
+    queue retaining completed `Job` objects in `completed_log` — together
+    they let a 100k-arrival trace replay aggregate wait/goodput stats
+    without ever holding more than the in-flight jobs alive
+    (workload/replay.py)."""
 
     def __init__(self):
         self._jobs: dict[int, Job] = {}
         self._ids = itertools.count()
         self.completed_log: list[Job] = []
+        self.keep_completed = True
+        self._complete_hooks: list[Callable[[Job], None]] = []
+        # bumped whenever the SET of idle cohorts changes (a cohort is
+        # born or drained) — the collector's C2 idle-poll verdict for an
+        # unclaimed worker is a pure function of this set, so workers
+        # cache it per version (worker.py any_cohort_matches)
+        self.idle_version = 0
         # indexes: per-state buckets + idle cohorts (jid -> Job each)
         self._by_state: dict[JobState, dict[int, Job]] = {
             s: {} for s in JobState
@@ -106,7 +120,11 @@ class JobQueue:
         job.state = state
         if state == JobState.IDLE:
             key = job.cohort_key
-            self._idle_cohorts.setdefault(key, {})[job.jid] = job
+            cohort = self._idle_cohorts.get(key)
+            if cohort is None:
+                cohort = self._idle_cohorts[key] = {}
+                self.idle_version += 1
+            cohort[job.jid] = job
             order = (job.submitted_at, job.jid)
             cur_min = self._cohort_min.get(key)
             if cur_min is None or order < cur_min:
@@ -129,6 +147,7 @@ class JobQueue:
                     self._cohort_min.pop(key, None)
                     self._cohort_tail.pop(key, None)
                     self._cohort_unsorted.discard(key)
+                    self.idle_version += 1
 
     def submit(self, job: Job, now: float = 0.0) -> int:
         job.jid = next(self._ids)
@@ -193,13 +212,20 @@ class JobQueue:
             job.started_at = now
         return job
 
+    def add_complete_hook(self, fn: Callable[[Job], None]):
+        """Observe every completion as it happens (streaming stats)."""
+        self._complete_hooks.append(fn)
+
     def complete(self, jid: int, now: float):
         job = self._jobs.pop(jid)
         self._leave_state(job)
         job.state = JobState.COMPLETED
         job.completed_at = now
         job.claimed_by = None
-        self.completed_log.append(job)
+        for hook in self._complete_hooks:
+            hook(job)
+        if self.keep_completed:
+            self.completed_log.append(job)
 
     def release(self, jid: int, now: float, *, preempted: bool = True):
         """Job returns to IDLE (preemption / worker death). Progress on the
@@ -224,6 +250,12 @@ class JobQueue:
     # -- stats ----------------------------------------------------------------
     def n_idle(self) -> int:
         return len(self._by_state[JobState.IDLE])
+
+    def n_idle_cohorts(self) -> int:
+        """Distinct matchmaking-equivalence classes currently idle — how a
+        trace's requirement mix materializes in the queue (a uniform burst
+        is 1; a replayed OSG day is kinds × users × Requirements)."""
+        return len(self._idle_cohorts)
 
     def n_running(self) -> int:
         return len(self._by_state[JobState.RUNNING])

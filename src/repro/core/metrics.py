@@ -118,6 +118,14 @@ class Recorder:
         return sum(lags) / len(lags) if lags else 0.0
 
 
+def percentile(vals: list[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 1]) of an unsorted list."""
+    if not vals:
+        return 0.0
+    s = sorted(vals)
+    return s[min(len(s) - 1, int(q * (len(s) - 1) + 0.5))]
+
+
 def summarize_jobs(completed: list, now: float) -> dict[str, Any]:
     if not completed:
         return {"n": 0}
@@ -135,6 +143,82 @@ def summarize_jobs(completed: list, now: float) -> dict[str, Any]:
         "goodput": done_work / (done_work + wasted)
         if done_work + wasted > 0 else 1.0,
     }
+
+
+class CompletedStats:
+    """Streaming completed-job aggregator for trace replay at scale.
+
+    Installed as a `JobQueue.add_complete_hook` observer (usually with
+    ``queue.keep_completed = False``): it folds each completion into
+    scalar accumulators plus a wait-time sample — plain floats, so a
+    100k-job campaign costs one small list, not 100k retained `Job`
+    objects.  `summary()` yields the wait-time percentiles and
+    core/GPU-hour totals the policy-comparison harness (workload/
+    compare.py) builds its Fig 2/3-style tables and conservation checks
+    from."""
+
+    WAIT_QUANTILES = (0.5, 0.9, 0.95, 0.99)
+
+    def __init__(self):
+        self.n = 0
+        self.runtime_s = 0.0
+        self.core_seconds = 0.0       # request_cpus × runtime
+        self.gpu_seconds = 0.0        # request_gpus × runtime
+        self.wasted_s = 0.0
+        self.preemptions = 0
+        self.waits: list[float] = []
+        self.last_completed_at = 0.0
+
+    def observe(self, job):
+        self.n += 1
+        self.runtime_s += job.runtime_s
+        cpus = float(job.ad.get("request_cpus", 1) or 1)
+        gpus = float(job.ad.get("request_gpus", 0) or 0)
+        self.core_seconds += cpus * job.runtime_s
+        self.gpu_seconds += gpus * job.runtime_s
+        self.wasted_s += job.wasted_s
+        self.preemptions += job.preempt_count
+        if job.started_at >= 0:
+            self.waits.append(job.started_at - job.submitted_at)
+        self.last_completed_at = max(self.last_completed_at,
+                                     job.completed_at)
+
+    def summary(self) -> dict[str, Any]:
+        out: dict[str, Any] = {
+            "n": self.n,
+            "mean_wait_s": (sum(self.waits) / len(self.waits)
+                            if self.waits else 0.0),
+            "preemptions": self.preemptions,
+            "wasted_s": self.wasted_s,
+            "goodput": (self.runtime_s / (self.runtime_s + self.wasted_s)
+                        if self.runtime_s + self.wasted_s > 0 else 1.0),
+            "core_hours": self.core_seconds / 3600.0,
+            "gpu_hours": self.gpu_seconds / 3600.0,
+        }
+        for q in self.WAIT_QUANTILES:
+            out[f"p{int(q * 100)}_wait_s"] = percentile(self.waits, q)
+        return out
+
+
+def timeline(recorder: Recorder, keys: tuple[str, ...],
+             max_points: int = 200) -> dict[str, dict[str, list[float]]]:
+    """Extract gauge series (queue depth, provisioned cores, cost rate …)
+    as JSON-ready {key: {"t": [...], "v": [...]}} tables, stride-
+    downsampled to at most `max_points` points (last sample always
+    kept) — the Fig 2/3-style curves the comparison harness emits."""
+    out: dict[str, dict[str, list[float]]] = {}
+    for key in keys:
+        s = recorder.series.get(key, [])
+        if not s:
+            out[key] = {"t": [], "v": []}
+            continue
+        stride = max(1, -(-len(s) // max_points))
+        pts = s[::stride]
+        if pts[-1] != s[-1]:
+            pts.append(s[-1])
+        out[key] = {"t": [round(t, 3) for t, _ in pts],
+                    "v": [v for _, v in pts]}
+    return out
 
 
 def summarize_backends(backends: list) -> dict[str, dict[str, Any]]:

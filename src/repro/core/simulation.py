@@ -188,6 +188,11 @@ class Simulation:
                 1 for w in self.collector.workers.values() if w.claimed
             ),
             live_nodes=sum(len(b.cluster.nodes) for b in self.backends),
+            idle_cohorts=self.queue.n_idle_cohorts(),
+            provisioned_cores=sum(
+                n.capacity.get("cpu", 0)
+                for b in self.backends for n in b.cluster.nodes.values()
+            ),
             cost_rate=sum(b.cost_rate() for b in self.backends),
         )
         if len(self.backends) > 1:
@@ -241,13 +246,28 @@ class Simulation:
                            priority=P_EXTERNAL)
 
     def submit_jobs(self, t: float, jobs: Iterable[Job]):
-        jobs = list(jobs)
+        """Submit a batch at time `t`.  Lists/tuples are counted up front
+        (for the event name); any OTHER iterable — a generator, a
+        streaming trace reader — is kept lazy and only drawn when the
+        event fires, so scheduling a 100k-job campaign materializes zero
+        `Job` objects until its arrival time (workload/replay.py spreads
+        the draw across many events).  Lazy iterables are consumed
+        exactly once: re-running the simulation needs a fresh one."""
+        if isinstance(jobs, (list, tuple)):
+            batch = list(jobs)
 
-        def fire(sim: "Simulation", now: float):
+            def fire(sim: "Simulation", now: float):
+                for j in batch:
+                    sim.queue.submit(j, now)
+
+            self.at(t, fire, name=f"submit x{len(batch)}")
+            return
+
+        def fire_lazy(sim: "Simulation", now: float):
             for j in jobs:
                 sim.queue.submit(j, now)
 
-        self.at(t, fire, name=f"submit x{len(jobs)}")
+        self.at(t, fire_lazy, name="submit (lazy)")
 
     def inject_node_failure(self, t: float, node_name: str | None = None,
                             backend: str | None = None):

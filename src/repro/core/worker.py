@@ -147,6 +147,11 @@ class Collector:
         # (job cohort, worker slot shape) -> bool; symmetric_match is a
         # pure function of the two ads, so entries never invalidate
         self._match_cache: dict[tuple, bool] = {}
+        # C2 idle-poll verdicts per SLOT SHAPE: {match_key: (idle-cohort
+        # version, any-match verdict)} — valid until the idle-cohort SET
+        # changes; a pool of identical idle workers polls once per
+        # version, not once per worker per event
+        self._poll_cache: dict[tuple, tuple[int, bool]] = {}
 
     def advertise(self, worker: Worker):
         self.workers[worker.name] = worker
@@ -190,12 +195,31 @@ class Collector:
 
     def any_cohort_matches(self, worker: Worker, queue: JobQueue) -> bool:
         """C2 idle poll: does ANY idle job match this worker? One check
-        per cohort, cache-hit for the common (idle worker) case."""
+        per cohort, cache-hit for the common (idle worker) case.
+
+        For an UNCLAIMED worker the verdict is a pure function of (slot
+        shape, idle-cohort set) — matching uses the full slot ad — so it
+        is cached per `worker.match_key()` against `queue.idle_version`:
+        however many identical workers sit idle, each cohort-set change
+        costs ONE rescan per distinct slot shape, and every other poll
+        is a dict hit."""
+        version = getattr(queue, "idle_version", None)
+        cacheable = version is not None and not worker.claimed
+        if cacheable:
+            cached = self._poll_cache.get(worker.match_key())
+            if cached is not None and cached[0] == version:
+                return cached[1]
+        hit = False
         for _key, jobs in queue.idle_cohorts():
             rep = next(iter(jobs.values()))
             if self.cohort_match(rep, worker):
-                return True
-        return False
+                hit = True
+                break
+        if cacheable:
+            if len(self._poll_cache) >= self.MATCH_CACHE_MAX:
+                self._poll_cache.clear()
+            self._poll_cache[worker.match_key()] = (version, hit)
+        return hit
 
     def negotiate(self, queue: JobQueue, now: float) -> int:
         """One vectorized matchmaking cycle. Returns number of new claims.

@@ -1,0 +1,117 @@
+"""Policy-comparison harness: document shape, conservation, CLI."""
+import json
+
+import pytest
+
+from repro.workload.compare import (
+    PolicySpec, compare, comparison_table, standard_policies,
+    standard_policy,
+)
+from repro.workload.generators import synthesize
+
+
+def tiny_trace(n=300, seed=21):
+    return synthesize(n, 3600.0, seed=seed, burst_frac=0.2, n_bursts=2)
+
+
+def fast(spec: PolicySpec) -> PolicySpec:
+    spec.tick_s = 15.0
+    spec.negotiate_interval_s = 30.0
+    spec.metrics_interval_s = 120.0
+    return spec
+
+
+def test_compare_two_policies_document_shape():
+    trace = tiny_trace()
+    policies = [fast(p) for p in
+                standard_policies(("fill-first", "cheapest-first"))]
+    doc = compare(trace, policies, coalesce_s=10.0)
+
+    assert set(doc) == {"trace", "replay", "policies", "conservation"}
+    assert set(doc["policies"]) == {"fill-first", "cheapest-first"}
+    for r in doc["policies"].values():
+        assert r["jobs"]["n"] == len(trace)
+        assert {"idle_jobs", "running_jobs", "provisioned_cores",
+                "live_nodes", "cost_rate", "idle_cohorts"} <= \
+            set(r["series"])
+        for key, s in r["series"].items():
+            assert len(s["t"]) == len(s["v"])
+        assert r["makespan_s"] > 0
+        assert "p95_wait_s" in r["jobs"]
+        assert "onprem" in r["backends"]
+    c = doc["conservation"]
+    assert c["ok"] is True
+    assert c["policies_agree"] is True
+    assert c["matches_trace"] is True
+    assert c["jobs_completed"] == [len(trace), len(trace)]
+    json.dumps(doc)                        # fully JSON-serializable
+
+
+def test_conservation_totals_match_trace():
+    trace = tiny_trace(150, seed=5)
+    doc = compare(trace, [fast(standard_policy("fill-first"))],
+                  coalesce_s=10.0)
+    c = doc["conservation"]
+    assert c["trace_jobs"] == 150
+    assert c["core_hours"][0] == pytest.approx(
+        trace.total_core_seconds() / 3600.0, abs=1e-4)  # 4-decimal JSON
+
+
+def test_nap_headroom_grid_names():
+    grid = standard_policies(("cheapest-first",), headrooms=(8, 24))
+    assert [p.name for p in grid] == ["cheapest-first/nap8",
+                                      "cheapest-first/nap24"]
+    assert "max_nodes=8" in grid[0].ini
+    assert "max_nodes=24" in grid[1].ini
+
+
+def test_duplicate_policy_names_rejected():
+    trace = tiny_trace(50)
+    ps = standard_policies(("fill-first", "fill-first"))
+    with pytest.raises(ValueError, match="duplicate"):
+        compare(trace, ps)
+
+
+def test_truncated_compare_skips_trace_totals():
+    trace = tiny_trace(120, seed=8)
+    doc = compare(trace, [fast(standard_policy("fill-first"))],
+                  coalesce_s=10.0, until_s=1800.0)
+    c = doc["conservation"]
+    assert "matches_trace" not in c
+    assert c["ok"] is True
+    n = doc["policies"]["fill-first"]["jobs"]["n"]
+    assert 0 < n < 120
+
+
+def test_comparison_table_renders():
+    trace = tiny_trace(80, seed=2)
+    doc = compare(trace, [fast(p) for p in
+                          standard_policies(("fill-first",))],
+                  coalesce_s=10.0)
+    table = comparison_table(doc)
+    assert "fill-first" in table
+    assert "conservation: ok=True" in table
+
+
+def test_cli_generate_and_compare(tmp_path):
+    from repro.workload.__main__ import main
+    trace_path = str(tmp_path / "t.jsonl")
+    out_path = str(tmp_path / "cmp.json")
+    assert main(["generate", "--preset", "diurnal", "--jobs", "150",
+                 "--seed", "4", "--duration-s", "3600",
+                 "--out", trace_path]) == 0
+    assert main(["compare", trace_path,
+                 "--policies", "fill-first,cheapest-first",
+                 "--coalesce-s", "15", "--out", out_path]) == 0
+    with open(out_path) as f:
+        doc = json.load(f)
+    assert doc["conservation"]["ok"] is True
+    assert set(doc["policies"]) == {"fill-first", "cheapest-first"}
+
+
+def test_cli_budget_failure(tmp_path):
+    from repro.workload.__main__ import main
+    rc = main(["compare", "--generate", "diurnal", "--jobs", "100",
+               "--duration-s", "1800", "--seed", "1",
+               "--policies", "fill-first", "--budget-s", "0.0"])
+    assert rc == 2

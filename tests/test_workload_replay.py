@@ -1,0 +1,197 @@
+"""Streaming replay: differential vs upfront submission, time-warp,
+truncation, lazy submit_jobs, and the 100k-arrival memory regression."""
+import weakref
+
+import pytest
+
+from repro.core import ProvisionerConfig, Simulation, onprem_nodes
+from repro.workload.generators import synthesize
+from repro.workload.replay import replay_trace, submit_trace_upfront
+from repro.workload.trace import Trace, TraceRecord
+
+
+def build_sim(nodes: int = 4, **cfg_kw) -> Simulation:
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=180,
+                            startup_delay_s=10,
+                            max_pods_per_group=600, max_total_pods=600,
+                            **cfg_kw)
+    return Simulation(cfg, nodes=onprem_nodes(nodes, gpus=8, cpus=64),
+                      tick_s=5, negotiate_interval_s=15,
+                      metrics_interval_s=60)
+
+
+def small_trace(n=200, seed=9) -> Trace:
+    return synthesize(n, 1800.0, seed=seed, burst_frac=0.2, n_bursts=2)
+
+
+def completion_signature(sim: Simulation):
+    return sorted((j.submitted_at, j.runtime_s, j.completed_at,
+                   j.ad.get("accounting_group"))
+                  for j in sim.queue.completed_log)
+
+
+# -- differential: streaming == upfront --------------------------------------
+
+def test_streaming_replay_matches_upfront_submission():
+    trace = small_trace()
+
+    sim_a = build_sim()
+    rep = replay_trace(sim_a, trace, coalesce_s=0.0)
+    sim_a.run_until_drained(max_t=1e6)
+
+    sim_b = build_sim()
+    n = submit_trace_upfront(sim_b, trace)
+    sim_b.run_until_drained(max_t=1e6)
+
+    assert n == len(trace)
+    assert rep.stats.submitted == len(trace)
+    assert rep.exhausted
+    assert len(sim_a.queue.completed_log) == len(trace)
+    assert completion_signature(sim_a) == completion_signature(sim_b)
+
+
+def test_exact_arrival_times_without_coalescing():
+    trace = Trace.from_records(
+        [TraceRecord(arrival_s=t, runtime_s=30.0)
+         for t in (0.0, 12.5, 13.75, 600.0)])
+    sim = build_sim()
+    replay_trace(sim, trace, coalesce_s=0.0)
+    sim.run_until_drained(max_t=1e6)
+    assert sorted(j.submitted_at for j in sim.queue.completed_log) == \
+        [0.0, 12.5, 13.75, 600.0]
+
+
+def test_coalescing_delays_but_never_drops():
+    trace = small_trace()
+    sim = build_sim()
+    rep = replay_trace(sim, trace, coalesce_s=20.0)
+    sim.run_until_drained(max_t=1e6)
+    assert rep.stats.submitted == len(trace)
+    by_arrival = sorted(r.arrival_s for r in trace.records)
+    got = sorted(j.submitted_at for j in sim.queue.completed_log)
+    for exact, quantized in zip(by_arrival, got):
+        assert exact - 1e-9 <= quantized <= exact + 20.0 + 1e-6
+
+
+# -- time-warp ---------------------------------------------------------------
+
+def test_time_warp_compresses_arrivals():
+    trace = Trace.from_records(
+        [TraceRecord(arrival_s=t, runtime_s=10.0)
+         for t in (0.0, 100.0, 1000.0)])
+    sim = build_sim()
+    rep = replay_trace(sim, trace, speed=4.0, coalesce_s=0.0)
+    sim.run_until_drained(max_t=1e6)
+    assert rep.stats.first_arrival_s == pytest.approx(0.0)
+    assert rep.stats.last_arrival_s == pytest.approx(250.0)
+    assert sorted(j.submitted_at for j in sim.queue.completed_log) == \
+        pytest.approx([0.0, 25.0, 250.0])
+
+
+# -- truncation windows ------------------------------------------------------
+
+def test_truncation_window():
+    trace = Trace.from_records(
+        [TraceRecord(arrival_s=float(t), runtime_s=10.0)
+         for t in range(0, 1000, 100)])
+    sim = build_sim()
+    rep = replay_trace(sim, trace, start_s=200.0, until_s=700.0,
+                       coalesce_s=0.0)
+    sim.run_until_drained(max_t=1e6)
+    # kept: arrivals 200..600 (5 records), re-zeroed at sim t=0
+    assert rep.stats.submitted == 5
+    assert rep.stats.truncated == 5       # 0,100 before + 700,800,900 after
+    assert sorted(j.submitted_at for j in sim.queue.completed_log) == \
+        pytest.approx([0.0, 100.0, 200.0, 300.0, 400.0])
+
+
+def test_empty_window_rejected():
+    sim = build_sim()
+    with pytest.raises(ValueError, match="window"):
+        replay_trace(sim, small_trace(), start_s=100.0, until_s=100.0)
+
+
+# -- lazy submit_jobs (satellite) --------------------------------------------
+
+def test_submit_jobs_accepts_lazy_iterables():
+    from repro.core.simulation import gpu_job
+    sim = build_sim()
+    drawn = []
+
+    def gen():
+        for i in range(50):
+            drawn.append(i)
+            yield gpu_job(30.0, gpus=1)
+
+    sim.submit_jobs(500.0, gen())
+    assert drawn == []                     # nothing materialized yet
+    sim.run(499.0)
+    assert drawn == []                     # still pending
+    sim.run(501.0)
+    assert len(drawn) == 50                # drawn exactly at fire time
+    assert sim.queue.n_idle() + sim.queue.n_running() == 50
+    sim.run_until_drained(max_t=1e6)
+    assert len(sim.queue.completed_log) == 50
+
+
+# -- the 100k-arrival memory regression (satellite) --------------------------
+
+def test_100k_replay_bounds_live_jobs():
+    """A 100k-arrival streaming replay must never hold more than the
+    in-flight window of `Job` objects alive: jobs materialize at arrival
+    and are released at completion (compact_completed streams stats
+    instead of retaining the completed log)."""
+    N = 100_000
+
+    def records():
+        for i in range(N):
+            yield TraceRecord(arrival_s=i * 0.02, runtime_s=20.0, cpus=1,
+                              memory_gb=2.0, group="uniform")
+
+    state = {"live": 0, "peak": 0, "created": 0}
+
+    def factory(rec):
+        job = rec.to_job()
+        state["created"] += 1
+        state["live"] += 1
+        state["peak"] = max(state["peak"], state["live"])
+
+        def dec():
+            state["live"] -= 1
+
+        weakref.finalize(job, dec)
+        return job
+
+    cfg = ProvisionerConfig(submit_interval_s=60, idle_timeout_s=300,
+                            startup_delay_s=10, max_pods_per_group=2500,
+                            max_total_pods=2500)
+    sim = Simulation(cfg, nodes=onprem_nodes(24, gpus=8, cpus=64),
+                     tick_s=10, negotiate_interval_s=15,
+                     metrics_interval_s=300)
+    rep = replay_trace(sim, records(), coalesce_s=2.0,
+                       compact_completed=True, job_factory=factory)
+    sim.run_until_drained(max_t=1e6)
+
+    assert rep.stats.submitted == N
+    assert state["created"] == N
+    assert rep.stats.completed is not None
+    assert rep.stats.completed.n == N
+    assert sim.queue.drained()
+    assert sim.queue.completed_log == []   # compacted away
+    # the whole point: in-flight window, not the whole campaign
+    assert state["peak"] <= 20_000, state
+    assert state["live"] == 0              # everything released at the end
+    # conservation through the streaming aggregator
+    assert rep.stats.completed.core_seconds == pytest.approx(N * 20.0)
+
+
+def test_compact_completed_streams_wait_stats():
+    trace = small_trace(100, seed=3)
+    sim = build_sim()
+    rep = replay_trace(sim, trace, compact_completed=True, coalesce_s=5.0)
+    sim.run_until_drained(max_t=1e6)
+    s = rep.stats.completed.summary()
+    assert s["n"] == 100
+    assert s["p95_wait_s"] >= s["p50_wait_s"] >= 0.0
+    assert s["core_hours"] == pytest.approx(
+        trace.total_core_seconds() / 3600.0)

@@ -1,0 +1,208 @@
+"""Trace schema: round-trips, validation, generator determinism."""
+import json
+
+import pytest
+
+from repro.core.classad import symmetric_match
+from repro.workload.generators import (
+    OSG_KINDS, arrival_times, diurnal_day, diurnal_profile,
+    lognormal_runtimes, pareto_runtimes, poisson_arrivals, synthesize,
+    uniform_burst, zipf_users,
+)
+from repro.workload.trace import (
+    FIELDS, Trace, TraceError, TraceRecord, iter_jsonl,
+)
+
+import numpy as np
+
+
+def small_trace() -> Trace:
+    return diurnal_day(200, seed=11, duration_s=7200)
+
+
+# -- round-trips -------------------------------------------------------------
+
+def test_jsonl_round_trip_is_identity():
+    t = small_trace()
+    text = t.to_jsonl()
+    t2 = Trace.from_jsonl(text)
+    assert t2.meta == t.meta               # meta rides the first line
+    assert t2.to_jsonl() == text
+    assert len(t2) == len(t)
+    assert t2.records == t.records
+
+
+def test_jsonl_meta_survives_file_round_trip(tmp_path):
+    t = small_trace()
+    path = str(tmp_path / "t.jsonl")
+    t.save(path)
+    t2 = Trace.load(path)
+    assert t2.meta == t.meta
+    assert t2.records == t.records
+    assert t2.to_jsonl() == t.to_jsonl()
+
+
+def test_csv_round_trip_is_identity(tmp_path):
+    t = small_trace()
+    text = t.to_csv()
+    t2 = Trace.from_csv(text)
+    assert t2.to_csv() == text
+    assert t2.records == t.records
+    path = str(tmp_path / "t.csv")
+    t.save(path)
+    assert Trace.load(path).records == t.records
+
+
+def test_csv_and_jsonl_agree():
+    t = small_trace()
+    assert Trace.from_csv(t.to_csv()).records == \
+        Trace.from_jsonl(t.to_jsonl()).records
+
+
+def test_iter_jsonl_streams_and_skips_meta():
+    t = small_trace()
+    lines = t.to_jsonl().splitlines()
+    assert "__trace_meta__" in lines[0]
+    streamed = list(iter_jsonl(iter(lines)))
+    assert streamed == t.records
+
+
+# -- validation --------------------------------------------------------------
+
+def test_out_of_order_arrivals_rejected():
+    recs = [TraceRecord(arrival_s=10, runtime_s=5),
+            TraceRecord(arrival_s=5, runtime_s=5)]
+    with pytest.raises(TraceError, match="arrival-ordered"):
+        Trace.from_records(recs)
+
+
+def test_bad_records_rejected():
+    with pytest.raises(TraceError):
+        TraceRecord(arrival_s=-1, runtime_s=5).validate()
+    with pytest.raises(TraceError):
+        TraceRecord(arrival_s=0, runtime_s=0).validate()
+    with pytest.raises(TraceError):
+        TraceRecord(arrival_s=0, runtime_s=5, cpus=0).validate()
+    with pytest.raises(TraceError, match="Requirements"):
+        TraceRecord(arrival_s=0, runtime_s=5,
+                    requirements="__import__('os')").validate()
+
+
+def test_bad_csv_header_rejected():
+    with pytest.raises(TraceError, match="header"):
+        Trace.from_csv("nope,nope\n1,2\n")
+
+
+def test_fields_schema_stable():
+    # serialization order is a compatibility contract
+    assert FIELDS == ("arrival_s", "runtime_s", "cpus", "gpus",
+                      "memory_gb", "disk_gb", "requirements", "group",
+                      "user", "attrs")
+
+
+# -- job mapping -------------------------------------------------------------
+
+def test_to_job_maps_ad_and_requirements():
+    rec = TraceRecord(arrival_s=0, runtime_s=60, cpus=4, gpus=1,
+                      memory_gb=16, requirements="arch == 'gpu'",
+                      group="gpu", user="user03",
+                      attrs={"arch": "gpu"})
+    job = rec.to_job()
+    assert job.ad["request_cpus"] == 4
+    assert job.ad["request_gpus"] == 1
+    assert job.ad["accounting_group"] == "gpu"
+    assert job.ad["arch"] == "gpu"
+    assert job.requirements is not None
+    # a matching slot ad satisfies both sides of the negotiation
+    offer = {"cpus": 4, "gpus": 1, "memory": 16, "disk": 8, "arch": "gpu"}
+    assert symmetric_match(job.ad, offer, job.requirements, None)
+    offer_cpu = {"cpus": 4, "gpus": 0, "memory": 16, "disk": 8}
+    assert not symmetric_match(job.ad, offer_cpu, job.requirements, None)
+
+
+def test_cohort_mix_matches_queue_cohorts():
+    from repro.core.jobqueue import JobQueue, cohort_key_of
+    t = small_trace()
+    mix = t.cohort_mix()
+    assert sum(mix.values()) == len(t)
+    q = JobQueue()
+    for rec in t.records:
+        q.submit(rec.to_job(), rec.arrival_s)
+    assert q.n_idle_cohorts() == len(mix)
+    # the preview key IS the queue's cohort key
+    rec = t.records[0]
+    assert rec.cohort_key() == cohort_key_of(rec.to_job())
+
+
+# -- generators --------------------------------------------------------------
+
+def test_generator_determinism_same_seed_same_bytes():
+    a = diurnal_day(500, seed=42, duration_s=14400)
+    b = diurnal_day(500, seed=42, duration_s=14400)
+    assert a.to_jsonl() == b.to_jsonl()
+    assert a.to_csv() == b.to_csv()
+
+
+def test_generator_different_seeds_differ():
+    a = diurnal_day(500, seed=1, duration_s=14400)
+    b = diurnal_day(500, seed=2, duration_s=14400)
+    assert a.to_jsonl() != b.to_jsonl()
+
+
+def test_exact_job_count_and_validity():
+    for n in (1, 7, 500):
+        t = synthesize(n, 7200, seed=5)
+        assert len(t) == n
+        t.validate()
+
+
+def test_uniform_burst_single_cohort():
+    t = uniform_burst(50, runtime_s=300)
+    assert len(t.cohort_mix()) == 1
+    assert t.records[0].arrival_s == 0.0
+
+
+def test_diurnal_mix_is_heterogeneous():
+    t = small_trace()
+    assert len(t.cohort_mix()) > 10
+    groups = {r.group for r in t.records}
+    assert groups <= {k.name for k in OSG_KINDS}
+    assert len(groups) >= 3
+
+
+def test_arrival_processes():
+    rng = np.random.default_rng(0)
+    ts = arrival_times(rng, 1000, 3600.0, diurnal_profile())
+    assert len(ts) == 1000
+    assert (np.diff(ts) >= 0).all()
+    assert 0 <= ts[0] and ts[-1] < 3600.0
+    ps = poisson_arrivals(np.random.default_rng(0), 1.0, 600.0)
+    assert (np.diff(ps) > 0).all() and ps[-1] < 600.0
+    # rate 1/s over 600s: count should be in the right ballpark
+    assert 450 < len(ps) < 750
+
+
+def test_runtime_models_heavy_tailed():
+    rng = np.random.default_rng(0)
+    ln = lognormal_runtimes(rng, 5000, 600.0, 1.0)
+    assert (ln >= 1.0).all()
+    assert np.median(ln) == pytest.approx(600.0, rel=0.15)
+    pa = pareto_runtimes(np.random.default_rng(0), 5000, 60.0, 1.5,
+                         cap_s=86400.0)
+    assert (pa >= 60.0).all() and (pa <= 86400.0).all()
+    assert np.mean(pa) > np.median(pa)      # right-skewed
+
+
+def test_zipf_users_skewed():
+    u = zipf_users(np.random.default_rng(0), 5000, 20)
+    counts = np.bincount(u, minlength=20)
+    assert counts[0] > counts[10]
+
+
+def test_trace_stats_totals():
+    t = small_trace()
+    s = t.stats()
+    assert s["n"] == len(t)
+    assert s["core_seconds"] == pytest.approx(
+        sum(r.cpus * r.runtime_s for r in t.records))
+    assert json.dumps(s)                     # JSON-serializable
