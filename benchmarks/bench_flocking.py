@@ -1,0 +1,110 @@
+"""Multi-schedd flocking at scale: negotiation-cycle overhead vs schedds.
+
+Replays the SAME 10k-job OSG-shaped trace through the standard
+3-backend federation three ways — 1, 4, and 16 schedds (split by user
+so every schedd gets demand) with hierarchical fair-share on — and
+compares against the single-queue baseline path on the identical trace.
+
+The guard: the 1-schedd flocking path must stay within --max-ratio
+(default 1.5x) of the single-queue wall time, i.e. the multi-queue
+refactor is free when you don't use it; 4/16 schedds are reported so
+cycle-cost growth with federation width is visible in CI history.
+
+Usage:
+    python benchmarks/bench_flocking.py [--jobs 10000]
+        [--budget-s SECONDS] [--max-ratio 1.5] [--schedds 1 4 16]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import Timer, emit
+from repro.workload.compare import run_policy, standard_policy
+from repro.workload.generators import diurnal_day
+
+
+def flocking_run(n_jobs: int, *, schedd_counts=(1, 4, 16),
+                 duration_s: float = 86400.0, seed: int = 7,
+                 coalesce_s: float = 10.0) -> dict:
+    trace = diurnal_day(n_jobs, seed=seed, duration_s=duration_s)
+    spec = standard_policy("cheapest-first")
+
+    def one(schedds: int | None) -> dict:
+        with Timer() as t:
+            if schedds is None:        # single-queue baseline path
+                r = run_policy(trace, spec, coalesce_s=coalesce_s)
+            else:
+                r = run_policy(trace, spec, coalesce_s=coalesce_s,
+                               schedds=schedds, split_by="user",
+                               fairshare=True)
+        assert r["jobs"]["n"] == n_jobs, (r["jobs"]["n"], n_jobs)
+        return {
+            "wall_s": round(t.s, 3),
+            "jobs_per_sec": round(n_jobs / t.s, 1),
+            "makespan_s": r["makespan_s"],
+            "p95_wait_s": round(r["jobs"]["p95_wait_s"], 1),
+            "pods_submitted": r["pods_submitted"],
+        }
+
+    baseline = one(None)
+    cells = {f"schedds_{n}": one(n) for n in schedd_counts}
+    ratio1 = (cells["schedds_1"]["wall_s"] / baseline["wall_s"]
+              if "schedds_1" in cells and baseline["wall_s"] > 0
+              else None)
+    return {
+        "jobs": n_jobs,
+        "single_queue": baseline,
+        **cells,
+        "flocking_overhead_at_1_schedd":
+            round(ratio1, 3) if ratio1 is not None else None,
+    }
+
+
+def run(echo: bool = True) -> dict:
+    """Unified-runner entry (benchmarks.run): small fixed-size grid."""
+    payload = flocking_run(2000, schedd_counts=(1, 4),
+                           duration_s=14400.0)
+    emit("flocking", payload, echo=echo)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=10_000)
+    ap.add_argument("--duration-s", type=float, default=86400.0)
+    ap.add_argument("--coalesce-s", type=float, default=10.0)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--schedds", type=int, nargs="*", default=[1, 4, 16])
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if TOTAL wall time exceeds this")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail if 1-schedd flocking wall time exceeds "
+                         "this multiple of the single-queue path")
+    args = ap.parse_args(argv)
+
+    payload = flocking_run(args.jobs, schedd_counts=tuple(args.schedds),
+                           duration_s=args.duration_s, seed=args.seed,
+                           coalesce_s=args.coalesce_s)
+    total = payload["single_queue"]["wall_s"] + sum(
+        payload[f"schedds_{n}"]["wall_s"] for n in args.schedds)
+    print(f"flocking: single-queue {payload['single_queue']['wall_s']}s; "
+          + "; ".join(
+              f"{n} schedds {payload[f'schedds_{n}']['wall_s']}s"
+              for n in args.schedds)
+          + f" (total {total:.1f}s)")
+    emit("flocking", payload)
+    ratio = payload["flocking_overhead_at_1_schedd"]
+    if ratio is not None and ratio > args.max_ratio:
+        print(f"FAIL: 1-schedd flocking is {ratio}x the single-queue "
+              f"path (budget {args.max_ratio}x)", file=sys.stderr)
+        return 1
+    if args.budget_s is not None and total > args.budget_s:
+        print(f"FAIL: {total:.1f}s > budget {args.budget_s}s",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,7 +3,12 @@ Kubernetes-managed resources into HTCondor pools (Sfiligoi et al., PEARC22).
 """
 from repro.core.classad import ClassAdExpr, symmetric_match, UNDEFINED
 from repro.core.events import EventHandle, EventLoop, PeriodicHandle
-from repro.core.jobqueue import Job, JobQueue, JobState, cohort_key_of
+from repro.core.fairshare import (
+    Accountant, ScheddSpec, UsageLedger, job_cores, make_schedd_specs,
+)
+from repro.core.jobqueue import (
+    FlockedQueues, Job, JobQueue, JobState, cohort_key_of, user_of,
+)
 from repro.core.cluster import KubeCluster, Node, Pod, PodPhase
 from repro.core.worker import Collector, Worker, advance_workers, kill_worker
 from repro.core.groups import GroupSignature, group_jobs, signature_of

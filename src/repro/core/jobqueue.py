@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
-from typing import Any, Callable, Iterator
+from typing import Any, Callable, Iterable, Iterator
 
 from repro.core.classad import ClassAdExpr
 
@@ -32,6 +32,18 @@ class JobState(enum.Enum):
     COMPLETED = "completed"
     HELD = "held"
     REMOVED = "removed"
+
+
+#: ad attribute naming the submitter; jobs without one are accounted
+#: under a single anonymous submitter
+USER_ATTR = "user"
+DEFAULT_USER = "unknown"
+
+
+def user_of(job: "Job") -> str:
+    """Submitter a job is accounted to (its ad's ``user`` attribute)."""
+    u = job.ad.get(USER_ATTR)
+    return str(u) if u else DEFAULT_USER
 
 
 @dataclasses.dataclass
@@ -53,6 +65,11 @@ class Job:
     wasted_s: float = 0.0         # work lost to preemption
     claimed_by: str | None = None
     cohort_key: tuple | None = None   # assigned at submit; ad-derived
+    # owning queue, stamped at submit: with several schedds flocking
+    # into one pool, a worker's completions must route back to the
+    # schedd the job came from (worker.py advance_workers)
+    schedd: Any = dataclasses.field(default=None, repr=False,
+                                    compare=False)
 
     def __post_init__(self):
         if self.remaining_s < 0:
@@ -90,12 +107,22 @@ class JobQueue:
     without ever holding more than the in-flight jobs alive
     (workload/replay.py)."""
 
-    def __init__(self):
+    def __init__(self, name: str = "schedd", ids=None):
+        # `name` identifies this schedd in a flocking federation (metric
+        # scopes, deficit attribution); `ids` lets several queues share
+        # one job-id counter so jids stay pool-unique — a worker's claim
+        # table is keyed by jid across every schedd it serves
+        self.name = name
         self._jobs: dict[int, Job] = {}
-        self._ids = itertools.count()
+        self._ids = ids if ids is not None else itertools.count()
         self.completed_log: list[Job] = []
         self.keep_completed = True
         self._complete_hooks: list[Callable[[Job], None]] = []
+        self._claim_hooks: list[Callable[[Job, float], None]] = []
+        self._release_hooks: list[Callable[[Job, float], None]] = []
+        # per-user running-job counts (fair-share metrics read these;
+        # the accountant tracks core RATES itself via the hooks)
+        self.running_by_user: dict[str, int] = {}
         # bumped whenever the SET of idle cohorts changes (a cohort is
         # born or drained) — the collector's C2 idle-poll verdict for an
         # unclaimed worker is a pure function of this set, so workers
@@ -152,6 +179,7 @@ class JobQueue:
     def submit(self, job: Job, now: float = 0.0) -> int:
         job.jid = next(self._ids)
         job.submitted_at = now
+        job.schedd = self
         if job.cohort_key is None:
             job.cohort_key = cohort_key_of(job)
         self._jobs[job.jid] = job
@@ -178,24 +206,29 @@ class JobQueue:
         ordering."""
         return self._cohort_min.get(key, (float("inf"), -1))
 
-    def cohort_jobs_sorted(self, key: tuple) -> list[Job]:
+    def cohort_jobs_sorted(self, key: tuple,
+                           limit: int | None = None) -> list[Job]:
         """A cohort's idle jobs in FIFO (submission) order.  Insertion
         order already IS submission order unless a released job re-entered
         behind newer ones — then ONE sort is paid and the cohort dict is
         rebuilt in order (flag + tail reset), restoring the O(n) fast
-        path for subsequent cycles."""
+        path for subsequent cycles.  `limit` returns only the first N —
+        fair-share hands out claim budgets of a few jobs at a time, and
+        must not copy a 10k-job cohort to take one."""
         cohort = self._idle_cohorts.get(key)
         if not cohort:
             return []
-        if key not in self._cohort_unsorted:
+        if key in self._cohort_unsorted:
+            jobs = sorted(cohort.values(),
+                          key=lambda j: (j.submitted_at, j.jid))
+            self._idle_cohorts[key] = {j.jid: j for j in jobs}
+            self._cohort_unsorted.discard(key)
+            last = jobs[-1]
+            self._cohort_tail[key] = (last.submitted_at, last.jid)
+            return jobs if limit is None else jobs[:limit]
+        if limit is None or limit >= len(cohort):
             return list(cohort.values())
-        jobs = sorted(cohort.values(),
-                      key=lambda j: (j.submitted_at, j.jid))
-        self._idle_cohorts[key] = {j.jid: j for j in jobs}
-        self._cohort_unsorted.discard(key)
-        last = jobs[-1]
-        self._cohort_tail[key] = (last.submitted_at, last.jid)
-        return jobs
+        return list(itertools.islice(cohort.values(), limit))
 
     def get(self, jid: int) -> Job:
         return self._jobs[jid]
@@ -210,14 +243,38 @@ class JobQueue:
         job.attempt_started_at = now
         if job.started_at < 0:
             job.started_at = now
+        user = user_of(job)
+        self.running_by_user[user] = self.running_by_user.get(user, 0) + 1
+        for hook in self._claim_hooks:
+            hook(job, now)
         return job
+
+    def _drop_running_user(self, job: Job):
+        user = user_of(job)
+        n = self.running_by_user.get(user, 0) - 1
+        if n > 0:
+            self.running_by_user[user] = n
+        else:
+            self.running_by_user.pop(user, None)
 
     def add_complete_hook(self, fn: Callable[[Job], None]):
         """Observe every completion as it happens (streaming stats)."""
         self._complete_hooks.append(fn)
 
+    def add_claim_hook(self, fn: Callable[[Job, float], None]):
+        """Observe every claim as it happens — the fair-share accountant
+        bumps the submitter's running-core rate here."""
+        self._claim_hooks.append(fn)
+
+    def add_release_hook(self, fn: Callable[[Job, float], None]):
+        """Observe every RUNNING -> IDLE release (preemption / worker
+        death) — the accounting mirror of the claim hook."""
+        self._release_hooks.append(fn)
+
     def complete(self, jid: int, now: float):
         job = self._jobs.pop(jid)
+        if job.state == JobState.RUNNING:
+            self._drop_running_user(job)
         self._leave_state(job)
         job.state = JobState.COMPLETED
         job.completed_at = now
@@ -243,9 +300,12 @@ class JobQueue:
             kept = (done // ckpt_every) * ckpt_every if ckpt_every else 0.0
             job.wasted_s += done - kept
             job.remaining_s = job.runtime_s - kept
+        self._drop_running_user(job)
         self._leave_state(job)
         self._enter_state(job, JobState.IDLE)
         job.claimed_by = None
+        for hook in self._release_hooks:
+            hook(job, now)
 
     # -- stats ----------------------------------------------------------------
     def n_idle(self) -> int:
@@ -260,5 +320,84 @@ class JobQueue:
     def n_running(self) -> int:
         return len(self._by_state[JobState.RUNNING])
 
+    def idle_by_user(self, now: float | None = None
+                     ) -> dict[str, tuple[int, float]]:
+        """{user: (idle count, starvation age)} from the idle cohorts —
+        starvation age is `now` minus the oldest idle submission the
+        user has CURRENTLY pending (0.0 when `now` is omitted).  One
+        pass over cohorts, not jobs: the oldest live member is the
+        cohort's first FIFO entry (`_cohort_min` would do — but it is
+        only reset when a cohort fully drains, so a continuously-fed
+        cohort would pin the age at its first-ever arrival)."""
+        out: dict[str, tuple[int, float]] = {}
+        for key, jobs in self._idle_cohorts.items():
+            rep = next(iter(jobs.values()))
+            user = user_of(rep)
+            oldest = self.cohort_jobs_sorted(key, 1)[0].submitted_at
+            n, prev_oldest = out.get(user, (0, float("inf")))
+            out[user] = (n + len(jobs), min(prev_oldest, oldest))
+        return {
+            u: (n, max(0.0, (now - t) if now is not None
+                       and t != float("inf") else 0.0))
+            for u, (n, t) in out.items()
+        }
+
     def drained(self) -> bool:
         return not self._jobs
+
+
+class FlockedQueues:
+    """Federation view over several schedds' queues, for pool
+    components that held a single-queue handle (the C2 idle poll, the
+    tick engine's scan negotiation, straggler mitigation).  Claims and
+    completions do NOT go through this view — they route to the owning
+    queue via `job.schedd`; only `release` routes here, by jid, for
+    callers that hold job ids rather than Job objects."""
+
+    def __init__(self, queues: Iterable[JobQueue]):
+        self.queues = list(queues)
+
+    @property
+    def idle_version(self) -> int:
+        # sum of per-queue versions: monotonic, and it changes whenever
+        # any queue's idle-cohort SET changes — the property the
+        # collector's C2 poll cache keys on
+        return sum(q.idle_version for q in self.queues)
+
+    def idle_cohorts(self) -> Iterator[tuple[tuple, dict[int, Job]]]:
+        for q in self.queues:
+            yield from q.idle_cohorts()
+
+    def idle_jobs(self) -> list[Job]:
+        out: list[Job] = []
+        for q in self.queues:
+            out.extend(q.idle_jobs())
+        return out
+
+    def jobs(self, state: JobState | None = None) -> list[Job]:
+        out: list[Job] = []
+        for q in self.queues:
+            out.extend(q.jobs(state))
+        return out
+
+    def release(self, jid: int, now: float, *, preempted: bool = True):
+        """Route a release to the owning queue (jids are pool-unique
+        when the queues share an id counter — the straggler policy
+        holds jids, not Job objects)."""
+        for q in self.queues:
+            if jid in q._jobs:
+                q.release(jid, now, preempted=preempted)
+                return
+        raise KeyError(jid)
+
+    def n_idle(self) -> int:
+        return sum(q.n_idle() for q in self.queues)
+
+    def n_idle_cohorts(self) -> int:
+        return sum(q.n_idle_cohorts() for q in self.queues)
+
+    def n_running(self) -> int:
+        return sum(q.n_running() for q in self.queues)
+
+    def drained(self) -> bool:
+        return all(q.drained() for q in self.queues)

@@ -65,7 +65,41 @@ class Recorder:
 
     def backends_recorded(self) -> list[str]:
         return sorted({k.split("@", 1)[1] for k in self.series
-                       if "@" in k})
+                       if "@" in k and "@schedd:" not in k
+                       and "@user:" not in k})
+
+    # -- per-schedd / per-user series (flocking fair-share) ------------------
+    def record_schedd(self, now: float, schedd: str, **gauges: float):
+        """Gauges attributed to one submit host, stored under
+        ``key@schedd:<name>`` (same sampling grid as `record`)."""
+        if not self._sample_ok(now):
+            return
+        for key, val in gauges.items():
+            self.series.setdefault(f"{key}@schedd:{schedd}", []).append(
+                (now, float(val)))
+
+    def record_user(self, now: float, user: str, **gauges: float):
+        """Gauges attributed to one submitter (pool-global, like the
+        accountant's ledger), stored under ``key@user:<name>``."""
+        if not self._sample_ok(now):
+            return
+        for key, val in gauges.items():
+            self.series.setdefault(f"{key}@user:{user}", []).append(
+                (now, float(val)))
+
+    def schedd_values(self, key: str, schedd: str) -> list[float]:
+        return self.values(f"{key}@schedd:{schedd}")
+
+    def user_values(self, key: str, user: str) -> list[float]:
+        return self.values(f"{key}@user:{user}")
+
+    def schedds_recorded(self) -> list[str]:
+        return sorted({k.split("@schedd:", 1)[1] for k in self.series
+                       if "@schedd:" in k})
+
+    def users_recorded(self) -> list[str]:
+        return sorted({k.split("@user:", 1)[1] for k in self.series
+                       if "@user:" in k})
 
     def values(self, key: str) -> list[float]:
         return [v for _, v in self.series.get(key, [])]
@@ -182,6 +216,21 @@ class CompletedStats:
             self.waits.append(job.started_at - job.submitted_at)
         self.last_completed_at = max(self.last_completed_at,
                                      job.completed_at)
+
+    def merge(self, other: "CompletedStats") -> "CompletedStats":
+        """Fold another aggregator in (cross-schedd totals under
+        flocking: one CompletedStats per replayer, merged for the
+        pool-level conservation checks).  Returns self."""
+        self.n += other.n
+        self.runtime_s += other.runtime_s
+        self.core_seconds += other.core_seconds
+        self.gpu_seconds += other.gpu_seconds
+        self.wasted_s += other.wasted_s
+        self.preemptions += other.preemptions
+        self.waits.extend(other.waits)
+        self.last_completed_at = max(self.last_completed_at,
+                                     other.last_completed_at)
+        return self
 
     def summary(self) -> dict[str, Any]:
         out: dict[str, Any] = {

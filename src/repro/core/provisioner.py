@@ -2,13 +2,26 @@
 
 Reconciliation loop (C1), run every ``submit_interval_s``:
 
-  1. snapshot idle jobs; keep those passing the job filter (C3)
-  2. group them by requirement signature (C4)
-  3. per group:  deficit = n_idle − (pending pods of the group
-                                     + unclaimed ready workers of the group)
+  1. snapshot idle jobs ACROSS EVERY SCHEDD feeding the pool; keep
+     those passing the job filter (C3)
+  2. subtract what the next negotiation cycle will absorb anyway: a
+     claim-free dry run (`Collector.preview_matches`) of the idle
+     cohorts against current free capacity — including partial slots —
+     leaves the POST-negotiation idle demand (the old unclaimed-worker
+     count double-counted jobs about to match existing capacity)
+  3. group the remainder by requirement signature (C4); per group:
+     deficit = post-negotiation idle − pending pods of the group
   4. split ``min(deficit, limits)`` across the scaling backends via the
      configured RoutingPolicy; submit pods whose requests equal the
      signature and whose START expression is the pushed-down filter
+
+Flocking: the provisioner serves an ordered list of schedd queues (a
+single `JobQueue` still works — it becomes a one-element list, the same
+compat pattern as the backend adapter).  Deficits are attributed per
+schedd, and when pod-count room is scarce, groups are served by OWED
+SHARE — demand weighted by 1/quota of the schedds it came from — rather
+than raw idle counts, so an underserved community's demand is
+provisioned for first.
 
 Scale-down is NOT here: workers self-terminate when idle (C2, worker.py),
 exactly as in the paper ("pods are configured to self-terminate if no user
@@ -51,6 +64,9 @@ class ProvisionStats:
     reaped_pending: int = 0
     per_group_submitted: dict = dataclasses.field(default_factory=dict)
     per_backend_submitted: dict = dataclasses.field(default_factory=dict)
+    # post-negotiation idle demand attributed to each schedd at the
+    # last reconcile (owed-share routing reads this; so do metrics)
+    per_schedd_deficit: dict = dataclasses.field(default_factory=dict)
 
 
 class Provisioner:
@@ -63,16 +79,24 @@ class Provisioner:
     def __init__(
         self,
         cfg: ProvisionerConfig,
-        queue: JobQueue,
+        queue: JobQueue | list | tuple,
         collector: Collector,
         backends: KubeCluster | list | tuple,
         *,
         routing: RoutingPolicy | None = None,
         cancel_stale_pending_s: float | None = None,
         worker_factory: Callable[..., Worker] | None = None,
+        schedd_quotas: dict[str, float] | None = None,
     ):
         self.cfg = cfg
-        self.queue = queue
+        # one schedd or a flocking-ordered list of them (compat adapter,
+        # mirroring the single-cluster backend adapter)
+        self.queues = (list(queue) if isinstance(queue, (list, tuple))
+                       else [queue])
+        if not self.queues:
+            raise ValueError("Provisioner needs at least one queue")
+        self.queue = self.queues[0]
+        self.schedd_quotas = dict(schedd_quotas or {})
         self.collector = collector
         if isinstance(backends, KubeCluster):
             backends = [adapt_single_cluster(backends)]
@@ -123,55 +147,111 @@ class Provisioner:
     def _total_live_pods(self) -> int:
         return sum(b.live_pods() for b in self.backends)
 
-    def _idle_group_counts(self) -> dict[GroupSignature, int]:
-        """Filtered idle demand per requirement signature (C3 + C4).
+    def _schedd_name(self, qi: int) -> str:
+        return getattr(self.queues[qi], "name", None) or f"schedd{qi:02d}"
 
-        Iterates the queue's idle COHORTS: one ClassAd filter evaluation
-        and one signature derivation per distinct ad — a 100k-job uniform
-        campaign costs two dict lookups, not 200k expression evals."""
+    def _cohort_ok(self, key, rep) -> bool:
+        ok = self._cohort_filter.get(key)
+        if ok is None:
+            ok = self.filter.evaluate(rep.ad)
+            if len(self._cohort_filter) >= self.COHORT_CACHE_MAX:
+                # unique-ad workloads: bound the memos (pure caches,
+                # safe to drop wholesale) — checked per insertion so
+                # one huge pass cannot blow past the cap
+                self._cohort_filter.clear()
+                self._cohort_sig.clear()
+            self._cohort_filter[key] = ok
+        return ok
+
+    def _cohort_signature(self, key, rep) -> GroupSignature:
+        sig = self._cohort_sig.get(key)
+        if sig is None:
+            sig = signature_of(rep)
+            self._cohort_sig[key] = sig
+        return sig
+
+    def _idle_group_counts(self, now: float) -> tuple[
+            dict[GroupSignature, int], dict[GroupSignature, dict], bool]:
+        """Filtered POST-NEGOTIATION idle demand per requirement
+        signature (C3 + C4), attributed per schedd.
+
+        Iterates each queue's idle COHORTS (one ClassAd filter
+        evaluation and one signature derivation per distinct ad — a
+        100k-job uniform campaign costs two dict lookups, not 200k
+        expression evals) and subtracts what `Collector.preview_matches`
+        says the next negotiation cycle will absorb with capacity that
+        already exists.  Returns ``(counts, by_schedd, legacy)`` where
+        `legacy` flags the foreign-queue fallback (pre-negotiation
+        counts; the caller must subtract unclaimed workers as the seed
+        did)."""
         counts: dict[GroupSignature, int] = {}
-        idle_cohorts = getattr(self.queue, "idle_cohorts", None)
-        if idle_cohorts is None:          # foreign queue: per-job fallback
-            idle = [j for j in self.queue.idle_jobs()
-                    if self.filter.evaluate(j.ad)]
-            return {sig: len(jobs) for sig, jobs in group_jobs(idle).items()}
-        for key, jobs in idle_cohorts():
-            if not jobs:
-                continue
-            ok = self._cohort_filter.get(key)
-            rep = next(iter(jobs.values()))
-            if ok is None:
-                ok = self.filter.evaluate(rep.ad)
-                if len(self._cohort_filter) >= self.COHORT_CACHE_MAX:
-                    # unique-ad workloads: bound the memos (pure caches,
-                    # safe to drop wholesale) — checked per insertion so
-                    # one huge pass cannot blow past the cap
-                    self._cohort_filter.clear()
-                    self._cohort_sig.clear()
-                self._cohort_filter[key] = ok
-            if not ok:
-                continue
-            sig = self._cohort_sig.get(key)
-            if sig is None:
-                sig = signature_of(rep)
-                self._cohort_sig[key] = sig
-            counts[sig] = counts.get(sig, 0) + len(jobs)
-        return counts
+        by_schedd: dict[GroupSignature, dict] = {}
+        if not all(hasattr(q, "idle_cohorts") for q in self.queues):
+            # foreign queue exposing only the seed surface
+            for qi, q in enumerate(self.queues):
+                name = self._schedd_name(qi)
+                idle = [j for j in q.idle_jobs()
+                        if self.filter.evaluate(j.ad)]
+                for sig, jobs in group_jobs(idle).items():
+                    counts[sig] = counts.get(sig, 0) + len(jobs)
+                    per = by_schedd.setdefault(sig, {})
+                    per[name] = per.get(name, 0) + len(jobs)
+            return counts, by_schedd, True
+        previews = self.collector.preview_matches(self.queues, now)
+        for qi, q in enumerate(self.queues):
+            absorbed = previews[qi]
+            name = self._schedd_name(qi)
+            for key, jobs in q.idle_cohorts():
+                if not jobs:
+                    continue
+                rep = next(iter(jobs.values()))
+                if not self._cohort_ok(key, rep):
+                    continue
+                n = len(jobs) - absorbed.get(key, 0)
+                if n <= 0:
+                    continue
+                sig = self._cohort_signature(key, rep)
+                counts[sig] = counts.get(sig, 0) + n
+                per = by_schedd.setdefault(sig, {})
+                per[name] = per.get(name, 0) + n
+        return counts, by_schedd, False
+
+    def _owed_weight(self, n: int, per_schedd: dict) -> float:
+        """Demand weighted by owed share: each schedd's contribution
+        counts 1/quota-fold, so an underserved small-quota community
+        does not get starved behind a big queue's raw counts.  With one
+        schedd (or no quotas) this is exactly the raw idle count — the
+        seed's ordering."""
+        if len(self.queues) == 1 or not per_schedd:
+            return float(n)
+        return sum(k / self.schedd_quotas.get(s, 1.0)
+                   for s, k in per_schedd.items())
 
     # -- the loop body ----------------------------------------------------------
     def reconcile(self, now: float) -> ProvisionStats:
         """One pass of the provisioning logic. Idempotent at fixed demand."""
         stats = ProvisionStats()
 
-        groups = self._idle_group_counts()
+        groups, by_schedd, legacy = self._idle_group_counts(now)
+        for sig, per in by_schedd.items():
+            for name, k in per.items():
+                stats.per_schedd_deficit[name] = (
+                    stats.per_schedd_deficit.get(name, 0) + k)
 
         for sig, n_idle in sorted(
-            groups.items(), key=lambda kv: -kv[1]
+            groups.items(),
+            key=lambda kv: -self._owed_weight(kv[1],
+                                              by_schedd.get(kv[0], {}))
         ):
             label = self._pod_group_label(sig)
             pending = self._group_pending(label)
-            unclaimed = self._group_unclaimed(sig)
-            deficit = n_idle - pending - unclaimed
+            if legacy:
+                # seed semantics for foreign queues: pre-negotiation
+                # idle minus zero-claim workers of the group
+                deficit = n_idle - pending - self._group_unclaimed(sig)
+            else:
+                # n_idle is already post-negotiation (preview-adjusted)
+                deficit = n_idle - pending
             if deficit <= 0:
                 continue
             room_group = self.cfg.max_pods_per_group - pending
@@ -207,6 +287,8 @@ class Provisioner:
         for name, k in stats.per_backend_submitted.items():
             self.stats.per_backend_submitted[name] = (
                 self.stats.per_backend_submitted.get(name, 0) + k)
+        # deficits are a gauge, not a counter: keep the latest snapshot
+        self.stats.per_schedd_deficit = dict(stats.per_schedd_deficit)
         return stats
 
     def maybe_reconcile(self, now: float) -> ProvisionStats | None:

@@ -34,6 +34,15 @@ keep pointing at that backend's internals.  Multi-provider federations
 pass `backends=[...]` or use `Simulation.from_config` with a config
 declaring `[backend:<name>]` sections.
 
+Multi-schedd flocking: `schedds=N` (or a list of `ScheddSpec`s with
+quotas and per-user priority factors) builds N submit-host queues
+sharing one pool-unique jid counter, negotiated as ONE cycle in
+flocking order (`Collector.negotiate_cycle`); `fairshare=True` (or an
+`Accountant`) adds hierarchical fair-share — per-schedd quotas, then
+per-user effective priority with usage decay.  The single-queue
+construction path is untouched (`sim.queue` keeps meaning the first/
+only schedd), matching the backend-adapter compat pattern.
+
 The same Provisioner/Worker code runs under wall-clock in the examples
 (launch/train.py elastic mode) — the simulator only replaces the clock and
 the job payloads, not the decision logic (paper-faithfulness hinges on
@@ -42,6 +51,7 @@ this separation).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Callable, Iterable
 
 import numpy as np
@@ -52,7 +62,8 @@ from repro.core.backend import (
 from repro.core.cluster import KubeCluster, Node
 from repro.core.config import ProvisionerConfig
 from repro.core.events import EventLoop
-from repro.core.jobqueue import Job, JobQueue
+from repro.core.fairshare import Accountant, ScheddSpec, make_schedd_specs
+from repro.core.jobqueue import FlockedQueues, Job, JobQueue
 from repro.core.metrics import (
     Recorder, summarize_backends, summarize_jobs, summarize_workers,
 )
@@ -92,6 +103,9 @@ class Simulation:
         seed: int = 0,
         straggler_policy: StragglerPolicy | None = None,
         engine: str = "event",
+        schedds: int | list | None = None,
+        fairshare: Accountant | bool | None = None,
+        negotiate_quantum: int = 1,
     ):
         if engine not in ("event", "tick"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -100,7 +114,43 @@ class Simulation:
         self.tick_s = tick_s
         self.negotiate_interval_s = negotiate_interval_s
         self.metrics_interval_s = metrics_interval_s or tick_s
-        self.queue = JobQueue()
+
+        # one schedd (the seed signature) or a flocking federation of
+        # them — `schedds=N` / `schedds=[ScheddSpec(...), ...]` makes N
+        # queues sharing one pool-unique jid counter; `fairshare=True`
+        # (or an Accountant) turns on hierarchical fair-share in the
+        # negotiation cycle
+        self.flocking = schedds is not None or fairshare is not None
+        self.negotiate_quantum = negotiate_quantum
+        if fairshare and engine == "tick":
+            # the tick engine's negotiate_scan is the seed oracle and
+            # knows nothing of the accountant — silently dropping the
+            # configured fair-share would be worse than refusing
+            raise ValueError(
+                "fairshare requires engine='event' (the tick baseline "
+                "negotiates per-job FIFO scans in flocking order only)")
+        if self.flocking:
+            self.schedd_specs = make_schedd_specs(
+                schedds if schedds is not None else 1)
+            ids = itertools.count()
+            self.queues = [JobQueue(name=s.name, ids=ids)
+                           for s in self.schedd_specs]
+            if fairshare is True:
+                fairshare = Accountant()
+            self.accountant = fairshare or None
+            if self.accountant is not None:
+                for spec, q in zip(self.schedd_specs, self.queues):
+                    self.accountant.set_quota(spec.name, spec.quota)
+                    for user, f in spec.priority_factors.items():
+                        self.accountant.set_priority_factor(user, f)
+                    self.accountant.attach_queue(spec.name, q)
+            self.pool_queue = FlockedQueues(self.queues)
+        else:
+            self.schedd_specs = [ScheddSpec(name="schedd")]
+            self.queues = [JobQueue()]
+            self.accountant = None
+            self.pool_queue = self.queues[0]
+        self.queue = self.queues[0]
         self.collector = Collector()
         if backends is None:
             # single-backend compatibility adapter (seed signature)
@@ -115,7 +165,8 @@ class Simulation:
         self.autoscaler = self.backends[0].autoscaler
         self.cluster_view = FederatedClusterView(self.backends)
         self.provisioner = Provisioner(
-            cfg, self.queue, self.collector, self.backends
+            cfg, self.queues, self.collector, self.backends,
+            schedd_quotas={s.name: s.quota for s in self.schedd_specs},
         )
         self.straggler_policy = straggler_policy
         self.recorder = Recorder()
@@ -170,17 +221,22 @@ class Simulation:
     # -- periodic callbacks (event engine) -----------------------------------
     def _negotiate_cb(self, now: float):
         self._last_negotiate = now
-        self.collector.negotiate(self.queue, now)
+        if self.flocking:
+            self.collector.negotiate_cycle(
+                self.queues, now, accountant=self.accountant,
+                quantum=self.negotiate_quantum)
+        else:
+            self.collector.negotiate(self.queue, now)
 
     def _straggler_cb(self, now: float):
-        self.straggler_policy.tick(self.queue, self.collector,
+        self.straggler_policy.tick(self.pool_queue, self.collector,
                                    self.cluster_view, now)
 
     def _record_cb(self, now: float):
         self.recorder.record(
             now,
-            idle_jobs=self.queue.n_idle(),
-            running_jobs=self.queue.n_running(),
+            idle_jobs=self.pool_queue.n_idle(),
+            running_jobs=self.pool_queue.n_running(),
             pending_pods=len(self.cluster_view.pending_pods()),
             running_pods=len(self.cluster_view.running_pods()),
             ready_workers=len(self.collector.alive_workers(now)),
@@ -188,7 +244,7 @@ class Simulation:
                 1 for w in self.collector.workers.values() if w.claimed
             ),
             live_nodes=sum(len(b.cluster.nodes) for b in self.backends),
-            idle_cohorts=self.queue.n_idle_cohorts(),
+            idle_cohorts=self.pool_queue.n_idle_cohorts(),
             provisioned_cores=sum(
                 n.capacity.get("cpu", 0)
                 for b in self.backends for n in b.cluster.nodes.values()
@@ -204,6 +260,41 @@ class Simulation:
                     live_nodes=len(b.cluster.nodes),
                     cost_rate=b.cost_rate(),
                 )
+        if self.flocking:
+            self._record_flocking(now)
+
+    def _record_flocking(self, now: float):
+        """Per-schedd and per-user fair-share gauges (idle, running,
+        effective priority, starvation age) — the Fig 2/3-style series
+        split by community that the compare harness surfaces."""
+        deficits = self.provisioner.stats.per_schedd_deficit
+        # per-user gauges are aggregated across schedds (users are
+        # pool-global in the accountant, as in HTCondor)
+        idle_u: dict[str, tuple[int, float]] = {}
+        running_u: dict[str, int] = {}
+        for q in self.queues:
+            self.recorder.record_schedd(
+                now, q.name,
+                idle_jobs=q.n_idle(),
+                running_jobs=q.n_running(),
+                deficit=deficits.get(q.name, 0),
+            )
+            for user, (n, age) in q.idle_by_user(now).items():
+                pn, page = idle_u.get(user, (0, 0.0))
+                idle_u[user] = (pn + n, max(page, age))
+            for user, n in q.running_by_user.items():
+                running_u[user] = running_u.get(user, 0) + n
+        for user in sorted(set(idle_u) | set(running_u)):
+            n, age = idle_u.get(user, (0, 0.0))
+            gauges = {
+                "idle_jobs": n,
+                "running_jobs": running_u.get(user, 0),
+                "starvation_age_s": age,
+            }
+            if self.accountant is not None:
+                gauges["effective_priority"] = (
+                    self.accountant.effective_priority(user, now))
+            self.recorder.record_user(now, user, **gauges)
 
     def _advance_to(self, t: float):
         """Integrate continuous state (running jobs, worker clocks) up to
@@ -211,7 +302,7 @@ class Simulation:
         if t <= self._advanced_until:
             return
         dt = t - self._advanced_until
-        advance_workers(self.collector, self.queue, self.cluster_view,
+        advance_workers(self.collector, self.pool_queue, self.cluster_view,
                         self._advanced_until, dt)
         self._advanced_until = t
 
@@ -245,27 +336,43 @@ class Simulation:
         self.loop.schedule(max(t, self.loop.now), fire, name=name,
                            priority=P_EXTERNAL)
 
-    def submit_jobs(self, t: float, jobs: Iterable[Job]):
-        """Submit a batch at time `t`.  Lists/tuples are counted up front
-        (for the event name); any OTHER iterable — a generator, a
-        streaming trace reader — is kept lazy and only drawn when the
-        event fires, so scheduling a 100k-job campaign materializes zero
-        `Job` objects until its arrival time (workload/replay.py spreads
-        the draw across many events).  Lazy iterables are consumed
-        exactly once: re-running the simulation needs a fresh one."""
+    def queue_named(self, schedd: str | int | None) -> JobQueue:
+        """Resolve a schedd by name or flocking index (None: first)."""
+        if schedd is None:
+            return self.queue
+        if isinstance(schedd, int):
+            return self.queues[schedd]
+        for q in self.queues:
+            if getattr(q, "name", None) == schedd:
+                return q
+        raise KeyError(f"no schedd named {schedd!r}; "
+                       f"have {[q.name for q in self.queues]}")
+
+    def submit_jobs(self, t: float, jobs: Iterable[Job],
+                    schedd: str | int | None = None):
+        """Submit a batch at time `t`, to one schedd's queue (`schedd`
+        names or indexes it; default: the first/only queue).  Lists/
+        tuples are counted up front (for the event name); any OTHER
+        iterable — a generator, a streaming trace reader — is kept lazy
+        and only drawn when the event fires, so scheduling a 100k-job
+        campaign materializes zero `Job` objects until its arrival time
+        (workload/replay.py spreads the draw across many events).  Lazy
+        iterables are consumed exactly once: re-running the simulation
+        needs a fresh one."""
+        target = self.queue_named(schedd)
         if isinstance(jobs, (list, tuple)):
             batch = list(jobs)
 
             def fire(sim: "Simulation", now: float):
                 for j in batch:
-                    sim.queue.submit(j, now)
+                    target.submit(j, now)
 
             self.at(t, fire, name=f"submit x{len(batch)}")
             return
 
         def fire_lazy(sim: "Simulation", now: float):
             for j in jobs:
-                sim.queue.submit(j, now)
+                target.submit(j, now)
 
         self.at(t, fire_lazy, name="submit (lazy)")
 
@@ -355,17 +462,21 @@ class Simulation:
         # 4. negotiation (last = now accumulates drift when the interval
         #    is not a multiple of tick_s — the event engine fixes this)
         if now - self._last_negotiate >= self.negotiate_interval_s:
-            self.collector.negotiate_scan(self.queue, now)
+            # flocking order, per-queue scans: the tick engine stays the
+            # seed's per-job oracle (candidates re-listed per queue so
+            # partial capacity carries across schedds via live offers)
+            for q in self.queues:
+                self.collector.negotiate_scan(q, now)
             self._last_negotiate = now
 
         # 5. workers advance (per-job idle polling, tick-quantized
         #    completions — the seed's exact semantics)
-        advance_workers(self.collector, self.queue, self.cluster_view,
+        advance_workers(self.collector, self.pool_queue, self.cluster_view,
                         now, dt, scan_matches=True, exact_completions=False)
 
         # 5b. straggler mitigation (beyond-paper; see core/stragglers.py)
         if self.straggler_policy is not None:
-            self.straggler_policy.tick(self.queue, self.collector,
+            self.straggler_policy.tick(self.pool_queue, self.collector,
                                        self.cluster_view, now)
 
         # 6. metrics
@@ -385,14 +496,18 @@ class Simulation:
         self.now = until
         self._flush_accounting()
 
+    def drained(self) -> bool:
+        """Every schedd's queue is empty (single-queue: the queue's)."""
+        return self.pool_queue.drained()
+
     def run_until_drained(self, max_t: float = 1e6):
         if self.engine == "tick":
-            while ((self.events or not self.queue.drained())
+            while ((self.events or not self.drained())
                    and self.now < max_t):
                 self._step_tick()
             self._flush_accounting()
             return
-        while ((self._external_pending > 0 or not self.queue.drained())
+        while ((self._external_pending > 0 or not self.drained())
                and self.now < max_t):
             t = self.loop.next_at()
             if t is None or t > max_t:
@@ -418,7 +533,17 @@ class Simulation:
     def summary(self) -> dict[str, Any]:
         self._flush_accounting()
         out: dict[str, Any] = {}
-        out["jobs"] = summarize_jobs(self.queue.completed_log, self.now)
+        completed = (self.queue.completed_log if not self.flocking
+                     else [j for q in self.queues
+                           for j in q.completed_log])
+        out["jobs"] = summarize_jobs(completed, self.now)
+        if self.flocking:
+            out["schedds"] = {
+                q.name: summarize_jobs(q.completed_log, self.now)
+                for q in self.queues
+            }
+            if self.accountant is not None:
+                out["fairshare"] = self.accountant.snapshot(self.now)
         out["workers"] = summarize_workers(self.all_workers)
         out["pods_submitted"] = self.provisioner.stats.submitted
         if self.autoscaler is not None:

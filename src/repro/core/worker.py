@@ -25,6 +25,15 @@ for unclaimed workers are memoized in the collector (pure functions of
 the two ads), which also makes the C2 idle poll in `advance_workers` a
 cohort-count scan.  `negotiate_scan()` keeps the seed's per-job loop as
 the differential-test oracle and the benchmark baseline.
+
+Flocking (multi-schedd): `negotiate_cycle()` runs ONE matchmaking cycle
+over an ordered list of schedd queues feeding the same pool — capacity
+drains through a shared free-resource matrix, plain mode serves queues
+strictly in flocking order, and with a fair-share `Accountant`
+(core/fairshare.py) the cycle water-fills capacity by per-schedd quota
+and per-user effective priority instead.  `preview_matches()` is the
+claim-free dry run the provisioner subtracts from idle counts so it
+never provisions for jobs the next cycle will match anyway.
 """
 from __future__ import annotations
 
@@ -35,7 +44,10 @@ from typing import Any
 import numpy as np
 
 from repro.core.classad import ClassAdExpr, symmetric_match
-from repro.core.jobqueue import Job, JobQueue, JobState, canonical_ad
+from repro.core.fairshare import job_cores
+from repro.core.jobqueue import (
+    Job, JobQueue, JobState, canonical_ad, user_of,
+)
 
 RESOURCE_KEYS = ("cpus", "gpus", "memory", "disk", "chips", "hbm_gb")
 # offer-ad attributes whose values shrink as a slot fills; expressions
@@ -248,8 +260,24 @@ class Collector:
             return 0
         free = np.stack([w.free_vec() for w in workers])
         cohorts.sort(key=lambda kv: queue.cohort_first_submit(kv[0]))
+        return self._match_cohorts(queue, cohorts, workers, free, now)
+
+    def _match_cohorts(self, queue: JobQueue, cohorts: list, workers: list,
+                       free: np.ndarray, now: float, *,
+                       budget: int | None = None,
+                       on_claim=None) -> int:
+        """The vectorized claiming loop over pre-sorted cohorts, against
+        a SHARED worker free-resource matrix (`free` mutates in place, so
+        several schedds in one negotiation cycle see capacity drain as
+        earlier ones claim).  `budget` caps new claims (fair-share hands
+        out capacity in bounded slices); `on_claim(job)` observes each
+        claim (the cycle charges usage from it)."""
         claims = 0
         for key, jobs in cohorts:
+            if not jobs:
+                continue               # drained by an earlier slice
+            if budget is not None and claims >= budget:
+                break
             rep = next(iter(jobs.values()))
             want = _job_req_vec(rep)
             pos = want > 0
@@ -265,7 +293,8 @@ class Collector:
                 fits = np.full(len(workers), float(len(jobs)))
             if fits.sum() <= 0:
                 continue
-            pending = queue.cohort_jobs_sorted(key)
+            pending = queue.cohort_jobs_sorted(
+                key, None if budget is None else budget - claims)
             # A START/Requirements expression that reads offered QUANTITIES
             # (e.g. 'gpus >= 2') must be re-evaluated against the shrinking
             # offer after every claim — block-claiming is only exact for
@@ -292,6 +321,8 @@ class Collector:
                         break
                     queue.claim(job.jid, w.name, now)
                     w.add_claim(job)
+                    if on_claim is not None:
+                        on_claim(job)
                     taken += 1
                 w.idle_since = -1.0
                 free[wi] -= want * taken
@@ -329,6 +360,162 @@ class Collector:
             if exhausted:
                 candidates.remove(matched)
         return claims
+
+    # -- flocking: several schedds, one pool ---------------------------------
+    def negotiate_cycle(self, queues, now: float, *, accountant=None,
+                        quantum: int = 1) -> int:
+        """One federated matchmaking cycle over several schedds.
+
+        `queues` is the FLOCKING ORDER — with no accountant, schedds
+        drain strictly in that order (earlier submit hosts see capacity
+        first, FIFO within each queue), against ONE shared free-resource
+        matrix.  A single queue without an accountant is exactly
+        `negotiate` — the differential tests pin that equivalence.
+
+        With an `Accountant` (core/fairshare.py) the cycle water-fills
+        capacity hierarchically, the way HTCondor's negotiator serves
+        submitters: repeatedly pick the most-owed schedd (smallest
+        usage/quota), then its best-priority user (smallest effective
+        priority = factor × (base + decayed usage)), hand that user at
+        most `quantum` claims through the vectorized matcher, charge the
+        claimed cores back as virtual usage, and repeat until no
+        (schedd, user) can claim anything more.  Serving the argmin and
+        charging it equalizes factor×usage across users and usage/quota
+        across schedds — the inverse-factor, proportional-quota split
+        HTCondor documents.  `quantum` is the fairness granularity (in
+        claims) traded against matcher calls per cycle: 1 is exact
+        water-filling (a 48-slot pool under 3:1 quotas splits 36:12,
+        ±1); coarser chunks truncate the fill ladder early and distort
+        small-pool splits."""
+        queues = list(queues)
+        if len(queues) == 1 and accountant is None:
+            return self.negotiate(queues[0], now)
+        workers = self.alive_workers(now)
+        if not workers:
+            return 0
+        free = np.stack([w.free_vec() for w in workers])
+        total = 0
+
+        if accountant is None:
+            for q in queues:
+                if not hasattr(q, "idle_cohorts"):
+                    n = self.negotiate_scan(q, now)
+                    if n:     # scan bypassed the shared matrix: rebuild
+                        free = np.stack([w.free_vec() for w in workers])
+                    total += n
+                    continue
+                cohorts = [(k, j) for k, j in q.idle_cohorts() if j]
+                cohorts.sort(key=lambda kv: q.cohort_first_submit(kv[0]))
+                total += self._match_cohorts(q, cohorts, workers, free,
+                                             now)
+            return total
+
+        accountant.reset_cycle()
+        names = [getattr(q, "name", f"schedd{i:02d}")
+                 for i, q in enumerate(queues)]
+        # (schedd idx, user) -> that user's idle cohorts, FIFO-sorted
+        active: dict[tuple[int, str], list] = {}
+        for si, q in enumerate(queues):
+            by_user: dict[str, list] = {}
+            for key, jobs in q.idle_cohorts():
+                if not jobs:
+                    continue
+                rep = next(iter(jobs.values()))
+                by_user.setdefault(user_of(rep), []).append((key, jobs))
+            for user, cohorts in by_user.items():
+                cohorts.sort(key=lambda kv: q.cohort_first_submit(kv[0]))
+                active[(si, user)] = cohorts
+        if not active:
+            return 0
+
+        quantum = max(1, int(quantum))
+        while active:
+            si = min({i for i, _ in active},
+                     key=lambda i: (accountant.group_owed(names[i], now),
+                                    i))
+            user = min((u for i, u in active if i == si),
+                       key=lambda u: (
+                           accountant.effective_priority(u, now), u))
+            cores = [0.0]
+
+            def observe(job, _c=cores):
+                _c[0] += job_cores(job)
+
+            got = self._match_cohorts(
+                queues[si], active[(si, user)], workers, free, now,
+                budget=quantum, on_claim=observe)
+            if got:
+                accountant.charge_virtual(names[si], user, cores[0])
+                total += got
+            if got < quantum:
+                # demand or matching capacity exhausted for this user —
+                # neither can grow within the cycle, so retire the entry
+                del active[(si, user)]
+        # claims are real running-core rates now; outside-the-cycle
+        # priority queries (metrics, owed-share deficits) must not see
+        # stale virtual charges on top of them
+        accountant.reset_cycle()
+        return total
+
+    def preview_matches(self, queues, now: float) -> list[dict]:
+        """Dry-run of the next negotiation cycle: how many of each
+        cohort's idle jobs CURRENT free capacity would absorb, without
+        claiming anything.  Returns one {cohort_key: absorbed} dict per
+        queue.  The provisioner computes deficits from the remaining
+        (post-negotiation) idle cohorts, so a job about to be matched to
+        existing capacity — including partial slots the old unclaimed-
+        worker count missed — is not provisioned for again.
+
+        Estimate caveat: quantity-reading START/Requirements expressions
+        are evaluated against the live offer, not the virtually-drained
+        one, so the preview can over-count absorption for such policies
+        by at most one cohort slice per worker."""
+        queues = list(queues)
+        out: list[dict] = [{} for _ in queues]
+        workers = self.alive_workers(now)
+        if not workers:
+            return out
+        entries = []
+        for qi, q in enumerate(queues):
+            if not hasattr(q, "idle_cohorts"):
+                continue          # foreign queue: no preview possible
+            for key, jobs in q.idle_cohorts():
+                if jobs:
+                    entries.append(
+                        (q.cohort_first_submit(key), qi, key, jobs))
+        if not entries:
+            return out
+        entries.sort(key=lambda e: (e[0], e[1]))
+        free = np.stack([w.free_vec() for w in workers])
+        for _first, qi, key, jobs in entries:
+            rep = next(iter(jobs.values()))
+            want = _job_req_vec(rep)
+            pos = want > 0
+            if pos.any():
+                fits = np.floor(
+                    (free[:, pos] / want[pos]).min(axis=1) + 1e-9)
+                fits = np.maximum(fits, 0.0)
+            else:
+                fits = np.full(len(workers), float(len(jobs)))
+            if fits.sum() <= 0:
+                continue
+            left = len(jobs)
+            absorbed = 0
+            for wi, w in enumerate(workers):
+                if left <= 0:
+                    break
+                k = int(fits[wi])
+                if k <= 0:
+                    continue
+                if not self.cohort_match(rep, w):
+                    continue
+                take = min(k, left)
+                free[wi] -= want * take
+                absorbed += take
+                left -= take
+            if absorbed:
+                out[qi][key] = absorbed
+        return out
 
 
 def advance_workers(
@@ -389,7 +576,10 @@ def advance_workers(
                     done = job.remaining_s <= 1e-9
                     t_done = t1
                 if done:
-                    queue.complete(jid, t_done)
+                    # route to the owning schedd: under flocking, one
+                    # worker serves jobs from several queues (`queue`
+                    # here may be a FlockedQueues view)
+                    (job.schedd or queue).complete(jid, t_done)
                     w.drop_claim(jid)
                 busy_until = max(busy_until, t_done)
             w.busy_s += (busy_until - seg0 if exact_completions else dt)
@@ -430,8 +620,8 @@ def kill_worker(collector: Collector, queue: JobQueue, worker_name: str,
     w = collector.workers.get(worker_name)
     if w is None:
         return
-    for jid in list(w.claimed):
-        queue.release(jid, now, preempted=True)
+    for jid, job in list(w.claimed.items()):
+        (job.schedd or queue).release(jid, now, preempted=True)
     w.clear_claims()
     w.terminated = True
     collector.invalidate(worker_name)

@@ -8,6 +8,7 @@ generate|replay|compare`` (see __main__.py).
 """
 from repro.workload.trace import (
     FIELDS, Trace, TraceError, TraceRecord, iter_jsonl, open_trace_stream,
+    split_records, split_trace,
 )
 from repro.workload.generators import (
     DAY_S, JobKind, OSG_KINDS, PRESETS, arrival_times, diurnal_day,
@@ -15,7 +16,8 @@ from repro.workload.generators import (
     poisson_arrivals, synthesize, uniform_burst, zipf_users,
 )
 from repro.workload.replay import (
-    ReplayStats, TraceReplayer, replay_trace, submit_trace_upfront,
+    ReplayStats, TraceReplayer, replay_flock, replay_trace,
+    submit_trace_upfront,
 )
 from repro.workload.compare import (
     FEDERATION_INI, PolicySpec, compare, comparison_table, run_policy,
@@ -24,7 +26,7 @@ from repro.workload.compare import (
 
 __all__ = [
     "FIELDS", "Trace", "TraceError", "TraceRecord", "iter_jsonl",
-    "open_trace_stream",
+    "open_trace_stream", "split_records", "split_trace", "replay_flock",
     "DAY_S", "JobKind", "OSG_KINDS", "PRESETS", "arrival_times",
     "diurnal_day", "diurnal_profile", "generate_preset",
     "lognormal_runtimes", "pareto_runtimes", "poisson_arrivals",

@@ -15,6 +15,16 @@
     python -m repro.workload compare --generate diurnal --jobs 10000 \
         --seed 7 --policies fill-first,cheapest-first --budget-s 60
 
+    # multi-schedd flocking: `compare --schedds N` splits ONE trace
+    # internally (3 schedds, fair-share negotiation) ...
+    python -m repro.workload compare day.jsonl --schedds 3 --fairshare \
+        --policies fill-first,cheapest-first --out cmp.json
+
+    # ... while `generate --split-by` writes per-schedd trace FILES
+    # (day.schedd00.jsonl ...) for external consumers
+    python -m repro.workload generate --jobs 10000 --split-by group \
+        --schedds 3 --out day.jsonl
+
 Exit codes: 0 ok; 1 bad usage/trace; 2 budget exceeded or conservation
 check failed (CI treats both as regressions).
 """
@@ -26,16 +36,36 @@ import sys
 import time
 
 from repro.workload.compare import (
-    compare, comparison_table, standard_policies, standard_policy,
+    compare, comparison_table, run_policy, standard_policies,
+    standard_policy,
 )
 from repro.workload.generators import DAY_S, generate_preset
 from repro.workload.replay import replay_trace
-from repro.workload.trace import Trace, TraceError
+from repro.workload.trace import Trace, TraceError, split_trace
+
+
+def _split_out_path(base: str, name: str) -> str:
+    root, dot, ext = base.rpartition(".")
+    return f"{root}.{name}.{ext}" if dot else f"{base}.{name}"
 
 
 def _cmd_generate(args) -> int:
     trace = generate_preset(args.preset, args.jobs, seed=args.seed,
                             duration_s=args.duration_s)
+    if args.split_by:
+        # per-schedd traces straight from the generator: one file per
+        # label (or per schedd bucket with --schedds N)
+        if not args.out:
+            print("generate: --split-by needs --out (one file per "
+                  "schedd)", file=sys.stderr)
+            return 1
+        parts = split_trace(trace, by=args.split_by,
+                            n_schedds=args.schedds)
+        for name, part in parts.items():
+            path = _split_out_path(args.out, name)
+            part.save(path)
+            print(f"wrote {len(part)} records to {path}")
+        return 0
     if args.out:
         trace.save(args.out)
         print(f"wrote {len(trace)} records to {args.out} "
@@ -52,6 +82,24 @@ def _cmd_replay(args) -> int:
         return 1
     trace = Trace.load(args.trace)
     spec = standard_policy(args.policy, headroom=args.headroom[0])
+    if args.schedds > 1 or args.fairshare:
+        # multi-schedd flocking replay: run_policy handles the split,
+        # the concurrent per-queue streams, and the per-schedd block
+        doc = run_policy(
+            trace, spec, speed=args.speed, coalesce_s=args.coalesce_s,
+            start_s=args.start_s, until_s=args.until_s,
+            max_t=args.max_t, schedds=args.schedds,
+            split_by=args.split_by or "group",
+            fairshare=args.fairshare)
+        doc.pop("_core_seconds", None)
+        doc.pop("_gpu_seconds", None)
+        doc = {"trace": {**trace.meta, **trace.stats()}, **doc}
+        out = json.dumps(doc, indent=1)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(out + "\n")
+        print(out)
+        return 0
     sim = spec.build()
     replayer = replay_trace(
         sim, trace, speed=args.speed, coalesce_s=args.coalesce_s,
@@ -102,7 +150,10 @@ def _cmd_compare(args) -> int:
     t0 = time.time()
     doc = compare(trace, policies, speed=args.speed,
                   coalesce_s=args.coalesce_s, start_s=args.start_s,
-                  until_s=args.until_s, max_t=args.max_t)
+                  until_s=args.until_s, max_t=args.max_t,
+                  schedds=args.schedds,
+                  split_by=args.split_by or "group",
+                  fairshare=args.fairshare)
     wall = time.time() - t0
     doc["wall_s_total"] = round(wall, 3)
     if args.out:
@@ -135,6 +186,11 @@ def main(argv=None) -> int:
     g.add_argument("--duration-s", type=float, default=DAY_S)
     g.add_argument("--out", default=None,
                    help=".jsonl or .csv (stdout JSONL when omitted)")
+    g.add_argument("--split-by", default=None, choices=("group", "user"),
+                   help="write per-schedd traces (one file per label, "
+                        "or per bucket with --schedds N)")
+    g.add_argument("--schedds", type=int, default=None,
+                   help="with --split-by: pack labels onto N schedds")
     g.set_defaults(fn=_cmd_generate)
 
     def _replay_opts(p):
@@ -147,6 +203,15 @@ def main(argv=None) -> int:
         p.add_argument("--max-t", type=float, default=5e6)
         p.add_argument("--headroom", type=int, default=24, nargs="*",
                        help="elastic backends' max_nodes (NAP headroom)")
+        p.add_argument("--schedds", type=int, default=1,
+                       help="flocking: split the trace per schedd and "
+                            "replay concurrently into one pool")
+        p.add_argument("--split-by", default=None,
+                       choices=("group", "user"),
+                       help="per-schedd split label (default group)")
+        p.add_argument("--fairshare", action="store_true",
+                       help="hierarchical fair-share negotiation "
+                            "(per-schedd quotas, per-user priority)")
         p.add_argument("--out", default=None)
 
     r = sub.add_parser("replay", help="stream a trace through one policy")

@@ -26,12 +26,13 @@ import time
 from typing import Any, Iterable, Sequence
 
 from repro.core import Simulation, load_ini
-from repro.core.metrics import timeline
-from repro.workload.replay import replay_trace
-from repro.workload.trace import Trace
+from repro.core.metrics import CompletedStats, timeline
+from repro.workload.replay import replay_flock, replay_trace
+from repro.workload.trace import Trace, split_trace
 
 SERIES_KEYS = ("idle_jobs", "running_jobs", "provisioned_cores",
                "live_nodes", "cost_rate", "idle_cohorts")
+SCHEDD_SERIES_KEYS = ("idle_jobs", "running_jobs", "deficit")
 
 # the standard 3-provider federation the CLI and examples compare on:
 # donated on-prem base + billed elastic cloud + cheap reclaimable spot
@@ -82,13 +83,15 @@ class PolicySpec:
     metrics_interval_s: float = 300.0
     seed: int = 0
 
-    def build(self) -> Simulation:
+    def build(self, **kw) -> Simulation:
+        """Extra keyword arguments (e.g. ``schedds=``, ``fairshare=``)
+        pass straight through to the Simulation constructor."""
         cfg = load_ini(self.ini)
         return Simulation.from_config(
             cfg, tick_s=self.tick_s,
             negotiate_interval_s=self.negotiate_interval_s,
             metrics_interval_s=self.metrics_interval_s,
-            seed=self.seed)
+            seed=self.seed, **kw)
 
 
 def standard_policy(routing: str, *, headroom: int = 24,
@@ -123,34 +126,64 @@ def standard_policies(routings: Sequence[str] = ("fill-first",
 def run_policy(trace: Trace | Iterable, spec: PolicySpec, *,
                speed: float = 1.0, coalesce_s: float = 10.0,
                start_s: float = 0.0, until_s: float | None = None,
-               max_t: float = 5e6, max_points: int = 200) -> dict[str, Any]:
+               max_t: float = 5e6, max_points: int = 200,
+               schedds: int = 1, split_by: str = "group",
+               fairshare: bool = False) -> dict[str, Any]:
     """Replay one trace through one policy's federation until drained;
-    returns the per-policy summary block."""
-    sim = spec.build()
-    replayer = replay_trace(sim, trace, speed=speed,
-                            coalesce_s=coalesce_s,
-                            start_s=start_s, until_s=until_s,
-                            compact_completed=True)
+    returns the per-policy summary block.
+
+    ``schedds=N`` runs the multi-schedd flocking scenario: the trace is
+    split per schedd by its ``split_by`` label (`split_trace`), each
+    sub-trace streams into its own queue on the shared event loop, and
+    the block gains a per-schedd section (job outcomes + Fig 2/3-style
+    idle/running/deficit series per submit host).  The pool-level
+    totals are the cross-schedd merge, so the conservation checks hold
+    unchanged.  ``fairshare=True`` negotiates with the hierarchical
+    fair-share accountant instead of plain flocking order."""
+    if schedds < 1:
+        raise ValueError(f"schedds must be >= 1, got {schedds}")
+    flocking = schedds > 1 or fairshare
+    if flocking:
+        if not isinstance(trace, Trace):
+            trace = Trace.from_records(trace)
+        parts = split_trace(trace, by=split_by, n_schedds=schedds)
+        sim = spec.build(schedds=list(parts),
+                         fairshare=True if fairshare else None)
+        replayers = replay_flock(
+            sim, parts, speed=speed, coalesce_s=coalesce_s,
+            start_s=start_s, until_s=until_s, compact_completed=True)
+    else:
+        sim = spec.build()
+        replayers = {"schedd": replay_trace(
+            sim, trace, speed=speed, coalesce_s=coalesce_s,
+            start_s=start_s, until_s=until_s, compact_completed=True)}
     t0 = time.time()
     sim.run_until_drained(max_t=max_t)
     wall_s = time.time() - t0
-    if not sim.queue.drained():
+    if not sim.drained():
+        idle = sum(q.n_idle() for q in sim.queues)
+        running = sum(q.n_running() for q in sim.queues)
         raise RuntimeError(
             f"policy {spec.name!r} failed to drain by t={max_t} "
-            f"({sim.queue.n_idle()} idle, {sim.queue.n_running()} running)")
-    done = replayer.stats.completed
-    assert done is not None
+            f"({idle} idle, {running} running)")
+    done = CompletedStats()
+    for rep in replayers.values():
+        assert rep.stats.completed is not None
+        done.merge(rep.stats.completed)
     s = sim.summary()
-    return {
+    out = {
         "policy": spec.name,
         "wall_s": round(wall_s, 3),
         "makespan_s": round(sim.now, 3),
         "jobs": done.summary(),
         "replay": {
-            "submitted": replayer.stats.submitted,
-            "truncated": replayer.stats.truncated,
-            "batches": replayer.stats.batches,
-            "max_batch": replayer.stats.max_batch,
+            "submitted": sum(r.stats.submitted
+                             for r in replayers.values()),
+            "truncated": sum(r.stats.truncated
+                             for r in replayers.values()),
+            "batches": sum(r.stats.batches for r in replayers.values()),
+            "max_batch": max(r.stats.max_batch
+                             for r in replayers.values()),
         },
         "pods_submitted": s["pods_submitted"],
         "cost_total": round(s["cost_total"], 4),
@@ -162,6 +195,52 @@ def run_policy(trace: Trace | Iterable, spec: PolicySpec, *,
         "_core_seconds": done.core_seconds,
         "_gpu_seconds": done.gpu_seconds,
     }
+    if flocking:
+        out["schedds"] = _per_schedd_block(sim, replayers, max_points)
+        users = _per_user_block(sim)
+        if users:
+            out["users"] = users
+        if fairshare and "fairshare" in s:
+            out["fairshare"] = s["fairshare"]
+    return out
+
+
+def _per_schedd_block(sim: Simulation, replayers: dict,
+                      max_points: int) -> dict[str, Any]:
+    """Per-submit-host outcomes + Fig 2/3-style series."""
+    out: dict[str, Any] = {}
+    for name, rep in replayers.items():
+        keys = tuple(f"{k}@schedd:{name}" for k in SCHEDD_SERIES_KEYS)
+        series = timeline(sim.recorder, keys, max_points=max_points)
+        out[name] = {
+            "jobs": rep.stats.completed.summary(),
+            "replay": {"submitted": rep.stats.submitted,
+                       "truncated": rep.stats.truncated},
+            "series": {k: series[f"{k}@schedd:{name}"]
+                       for k in SCHEDD_SERIES_KEYS},
+        }
+    return out
+
+
+def _per_user_block(sim: Simulation) -> dict[str, Any]:
+    """Per-submitter fair-share gauges, summarized: peak starvation age
+    and mean running slots over the run (full series stay in the
+    recorder for callers that want them)."""
+    out: dict[str, Any] = {}
+    for user in sim.recorder.users_recorded():
+        running = sim.recorder.user_values("running_jobs", user)
+        entry = {
+            "max_starvation_age_s": round(
+                max(sim.recorder.user_values("starvation_age_s", user),
+                    default=0.0), 3),
+            "mean_running_jobs": round(
+                sum(running) / len(running) if running else 0.0, 3),
+        }
+        eup = sim.recorder.user_values("effective_priority", user)
+        if eup:
+            entry["last_effective_priority"] = round(eup[-1], 6)
+        out[user] = entry
+    return out
 
 
 def _conservation(trace_stats: dict[str, Any],
@@ -200,10 +279,15 @@ def _conservation(trace_stats: dict[str, Any],
 def compare(trace: Trace, policies: Sequence[PolicySpec], *,
             speed: float = 1.0, coalesce_s: float = 10.0,
             start_s: float = 0.0, until_s: float | None = None,
-            max_t: float = 5e6, max_points: int = 200) -> dict[str, Any]:
+            max_t: float = 5e6, max_points: int = 200,
+            schedds: int = 1, split_by: str = "group",
+            fairshare: bool = False) -> dict[str, Any]:
     """Run one trace across every policy; returns the JSON-ready
     comparison document (trace stats, per-policy summaries+series,
-    conservation verdict)."""
+    conservation verdict).  ``schedds=N`` replays the trace split per
+    schedd (`split_by` label) through each policy's federation — the
+    conservation checks then verify the CROSS-SCHEDD totals against the
+    trace, demand being conserved however it is partitioned."""
     if not policies:
         raise ValueError("need at least one PolicySpec")
     names = [p.name for p in policies]
@@ -214,7 +298,8 @@ def compare(trace: Trace, policies: Sequence[PolicySpec], *,
     runs = [
         run_policy(trace, spec, speed=speed, coalesce_s=coalesce_s,
                    start_s=start_s, until_s=until_s, max_t=max_t,
-                   max_points=max_points)
+                   max_points=max_points, schedds=schedds,
+                   split_by=split_by, fairshare=fairshare)
         for spec in policies
     ]
     truncated = (start_s > 0.0 or until_s is not None)
@@ -222,7 +307,9 @@ def compare(trace: Trace, policies: Sequence[PolicySpec], *,
     return {
         "trace": {**trace.meta, **trace_stats},
         "replay": {"speed": speed, "coalesce_s": coalesce_s,
-                   "start_s": start_s, "until_s": until_s},
+                   "start_s": start_s, "until_s": until_s,
+                   "schedds": schedds, "split_by": split_by,
+                   "fairshare": fairshare},
         "policies": {r["policy"]: r for r in runs},
         "conservation": conservation,
     }

@@ -62,6 +62,7 @@ class TraceReplayer:
         max_batch: int = 50_000,
         job_factory: Callable[[TraceRecord], Job] | None = None,
         compact_completed: bool = False,
+        queue=None,
     ):
         if speed <= 0:
             raise ValueError(f"speed must be positive, got {speed}")
@@ -78,11 +79,14 @@ class TraceReplayer:
         self.at = sim.now if at is None else at
         self.max_batch = max_batch
         self.job_factory = job_factory or TraceRecord.to_job
+        # target schedd: under flocking each replayer feeds ITS queue —
+        # several replayers share one event loop, one per submit host
+        self.queue = queue if queue is not None else sim.queue
         self.stats = ReplayStats()
         if compact_completed:
             self.stats.completed = CompletedStats()
-            sim.queue.keep_completed = False
-            sim.queue.add_complete_hook(self.stats.completed.observe)
+            self.queue.keep_completed = False
+            self.queue.add_complete_hook(self.stats.completed.observe)
         self._records = self._windowed(
             iter(records.records) if isinstance(records, Trace)
             else iter(records))
@@ -138,7 +142,7 @@ class TraceReplayer:
                 self._pushback = rec
                 break
             job = self.job_factory(rec)
-            sim.queue.submit(job, now)
+            self.queue.submit(job, now)
             if self.stats.first_arrival_s < 0:
                 self.stats.first_arrival_s = now
             self.stats.last_arrival_s = now
@@ -159,6 +163,24 @@ def replay_trace(sim, records, **kw) -> TraceReplayer:
     `.stats` fill in as the simulation runs.  Drive the simulation with
     `sim.run_until_drained(...)` as usual."""
     return TraceReplayer(sim, records, **kw)
+
+
+def replay_flock(sim, traces: dict, **kw) -> dict[str, TraceReplayer]:
+    """Install one streaming replayer PER SCHEDD on a multi-queue
+    simulation: `traces` maps schedd name -> trace (what `split_trace`
+    returns, keyed to the sim's `schedds=` names).  Every replayer
+    self-arms on the one shared event loop, so the traces stream
+    concurrently — each feeding its own queue — and `run_until_drained`
+    sees the union as live until every stream is exhausted.  Extra
+    keyword arguments (speed, coalesce_s, compact_completed, ...) apply
+    to every replayer.  Returns {schedd name: replayer}; empty traces
+    still get a (trivially-exhausted) replayer so the result is
+    keyed like the input."""
+    out: dict[str, TraceReplayer] = {}
+    for name, trace in traces.items():
+        out[name] = TraceReplayer(sim, trace, queue=sim.queue_named(name),
+                                  **kw)
+    return out
 
 
 def submit_trace_upfront(sim, trace: Trace | Iterable[TraceRecord], *,

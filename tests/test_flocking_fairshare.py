@@ -1,0 +1,386 @@
+"""Multi-schedd flocking + hierarchical fair-share (core/fairshare.py,
+Collector.negotiate_cycle, multi-queue Provisioner deficits).
+
+Pins the PR's contracts:
+
+  * the usage ledger integrates decayed usage in closed form
+  * two users with 2:1 priority factors over a long uniform backlog end
+    within 5% of a 2:1 running-slot split (HTCondor's inverse-factor
+    entitlement), and quotas split the pool across schedds likewise
+  * a 1-schedd flocking setup is tick-for-tick identical to the
+    existing single-queue path (the compat adapter differential)
+  * the provisioner computes deficits from POST-negotiation idle
+    cohorts: jobs the next cycle will match to existing (even partial)
+    capacity are not provisioned for again — the double-count fix
+  * trace splitting is an exact, deterministic, order-preserving
+    partition, and a concurrent multi-schedd replay conserves demand
+"""
+import pytest
+
+from repro.core import (
+    Accountant, ClassAdExpr, Collector, Job, JobQueue, KubeCluster, Node,
+    Provisioner, ProvisionerConfig, ScheddSpec, Simulation, UsageLedger,
+    Worker, gpu_job, onprem_nodes,
+)
+from repro.workload.generators import diurnal_day
+from repro.workload.replay import replay_flock
+from repro.workload.trace import split_trace
+
+
+def mk_cfg(**kw):
+    return ProvisionerConfig(
+        submit_interval_s=kw.pop("submit_interval_s", 30),
+        idle_timeout_s=kw.pop("idle_timeout_s", 120),
+        startup_delay_s=kw.pop("startup_delay_s", 30),
+        **kw,
+    )
+
+
+def user_job(runtime_s, user, *, gpus=1, cpus=1):
+    return gpu_job(runtime_s, gpus=gpus, cpus=cpus,
+                   extra_ad={"user": user})
+
+
+# ---------------------------------------------------------------------------
+# UsageLedger: decay + rate integration in closed form
+# ---------------------------------------------------------------------------
+
+def test_ledger_halves_usage_per_half_life():
+    led = UsageLedger(half_life_s=100.0)
+    led.charge("u", 80.0, 0.0)
+    assert led.usage("u", 100.0) == pytest.approx(40.0)
+    assert led.usage("u", 300.0) == pytest.approx(10.0)
+
+
+def test_ledger_rate_converges_to_effective_cores():
+    """A key holding a steady rate r converges to effective_cores == r
+    (usage -> r*hl/ln2), whatever the half-life."""
+    led = UsageLedger(half_life_s=50.0)
+    led.add_rate("u", 3.0, 0.0)
+    # settle in many small steps vs one big step: same closed form
+    for t in range(1, 2001):
+        led.usage("u", float(t))
+    assert led.effective_cores("u", 2000.0) == pytest.approx(3.0,
+                                                             rel=1e-6)
+    led2 = UsageLedger(half_life_s=50.0)
+    led2.add_rate("u", 3.0, 0.0)
+    assert led2.usage("u", 2000.0) == pytest.approx(
+        led.usage("u", 2000.0), rel=1e-9)
+
+
+def test_ledger_rate_changes_settle_exactly():
+    led = UsageLedger(half_life_s=1e12)   # ~no decay: pure integral
+    led.add_rate("u", 2.0, 0.0)
+    led.add_rate("u", -2.0, 10.0)         # ran 2 cores for 10 s
+    # rel tolerance absorbs the 1-0.5^eps cancellation at huge half-life
+    assert led.usage("u", 50.0) == pytest.approx(20.0, rel=1e-4)
+
+
+def test_accountant_effective_priority_orders_by_factor():
+    acct = Accountant(half_life_s=100.0)
+    acct.set_priority_factor("heavy", 2.0)
+    acct.users.charge("heavy", 100.0, 0.0)
+    acct.users.charge("light", 100.0, 0.0)
+    assert (acct.effective_priority("heavy", 0.0)
+            > acct.effective_priority("light", 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Fair-share convergence: 2:1 priority factors -> 2:1 slot split
+# ---------------------------------------------------------------------------
+
+def test_two_user_fair_share_converges_to_inverse_factors():
+    """Long uniform backlog from two users with priority factors 2:1 on
+    a fixed 48-slot pool: the running-slot split must settle within 5%
+    of 2:1 (alice, factor 1, gets two thirds) — on the event engine."""
+    acct = Accountant(half_life_s=1800.0)
+    acct.set_priority_factor("alice", 1.0)
+    acct.set_priority_factor("bob", 2.0)
+    sim = Simulation(mk_cfg(idle_timeout_s=300), schedds=1,
+                     fairshare=acct, nodes=onprem_nodes(6, gpus=8),
+                     tick_s=5)
+    jobs = [user_job(120, "alice" if i % 2 == 0 else "bob")
+            for i in range(4000)]
+    sim.submit_jobs(0, jobs)
+    sim.run(2000)
+    total = 6 * 8
+    for t in (3000, 4000, 5000):
+        sim.run(t)
+        a = sim.queue.running_by_user.get("alice", 0)
+        b = sim.queue.running_by_user.get("bob", 0)
+        assert a + b == total, "backlog must keep the pool saturated"
+        assert abs(a / total - 2.0 / 3.0) <= 0.05, (t, a, b)
+
+
+def test_schedd_quotas_split_pool_proportionally():
+    """Group layer: two schedds with 3:1 quotas, one user each, both
+    with deep backlogs — running slots split ~3:1 across schedds."""
+    sim = Simulation(
+        mk_cfg(idle_timeout_s=300),
+        schedds=[ScheddSpec("big", quota=3.0),
+                 ScheddSpec("small", quota=1.0)],
+        fairshare=True, nodes=onprem_nodes(6, gpus=8), tick_s=5)
+    sim.submit_jobs(0, [user_job(120, "u-big") for _ in range(2000)],
+                    schedd="big")
+    sim.submit_jobs(0, [user_job(120, "u-small") for _ in range(2000)],
+                    schedd="small")
+    sim.run(4000)
+    big = sim.queue_named("big").n_running()
+    small = sim.queue_named("small").n_running()
+    assert big + small == 48
+    assert abs(big / 48 - 0.75) <= 0.05, (big, small)
+
+
+def test_fairshare_on_tick_engine_is_rejected():
+    """The tick baseline negotiates with per-job FIFO scans and cannot
+    honour the accountant — configuring both must fail loudly instead
+    of silently ignoring quotas/factors."""
+    with pytest.raises(ValueError, match="engine='event'"):
+        Simulation(mk_cfg(), engine="tick", schedds=2, fairshare=True,
+                   nodes=onprem_nodes(1))
+
+
+def test_straggler_policy_covers_every_schedd():
+    """Mitigation must see RUNNING jobs of all queues, not schedd 0's."""
+    from repro.core.stragglers import StragglerPolicy
+
+    pol = StragglerPolicy(factor=2.0, min_runtime_s=0.0)
+    sim = Simulation(mk_cfg(idle_timeout_s=600), schedds=2,
+                     nodes=onprem_nodes(2, gpus=8), tick_s=5,
+                     straggler_policy=pol)
+    # schedd01's only job lands on a straggling worker (runs at 1% speed)
+    sim.submit_jobs(0, [gpu_job(100, gpus=1)], schedd=1)
+    sim.inject_slow_workers(60, frac=1.0, rate=0.01)
+    sim.run(2000)
+    assert pol.rescheduled >= 1, \
+        "straggler on a non-first schedd was never rescheduled"
+
+
+def test_starvation_age_tracks_current_oldest_not_cohort_history():
+    """A continuously-fed cohort must not pin the starvation age at its
+    first-ever arrival once that job has been served."""
+    q = JobQueue()
+    a = Job(ad={"request_cpus": 1, "user": "u"}, runtime_s=60)
+    q.submit(a, 0.0)
+    q.submit(Job(ad={"request_cpus": 1, "user": "u"}, runtime_s=60),
+             500.0)
+    q.claim(a.jid, "w0", 510.0)      # the t=0 job starts; cohort lives on
+    (n, age), = q.idle_by_user(600.0).values()
+    assert n == 1
+    assert age == pytest.approx(100.0)   # 600 - 500, not 600 - 0
+
+
+def test_fair_share_yields_pool_when_competitor_drains():
+    """No artificial starvation: when the favoured user's queue empties
+    the other user takes the whole pool."""
+    acct = Accountant(half_life_s=600.0)
+    acct.set_priority_factor("bob", 2.0)
+    sim = Simulation(mk_cfg(idle_timeout_s=600), schedds=1,
+                     fairshare=acct, nodes=onprem_nodes(2, gpus=8),
+                     tick_s=5)
+    sim.submit_jobs(0, [user_job(100, "alice") for _ in range(40)]
+                    + [user_job(100, "bob") for _ in range(200)])
+    sim.run_until_drained(max_t=50_000)
+    assert sim.drained()
+    done = len(sim.queue.completed_log)
+    assert done == 240
+
+
+# ---------------------------------------------------------------------------
+# Differential: 1-schedd flocking == single-queue path, tick for tick
+# ---------------------------------------------------------------------------
+
+def _snapshot(sim):
+    return (
+        round(sim.now, 6),
+        sim.queue.n_idle(),
+        sim.queue.n_running(),
+        len(sim.queue.completed_log),
+        sim.provisioner.stats.submitted,
+        sorted(sim.collector.workers),
+    )
+
+
+@pytest.mark.parametrize("engine", ["event", "tick"])
+def test_one_schedd_flocking_identical_to_single_queue(engine):
+    """`schedds=1` (no accountant) must reproduce the single-queue
+    construction path exactly — same queue depths, completions, pod
+    submissions, and worker set after every tick, on both engines."""
+    def build(flocking):
+        sim = Simulation(mk_cfg(), nodes=onprem_nodes(3, gpus=8),
+                         tick_s=5, engine=engine,
+                         **({"schedds": 1} if flocking else {}))
+        sim.submit_jobs(0, [gpu_job(90, gpus=1) for _ in range(30)])
+        sim.submit_jobs(200, [gpu_job(150, gpus=2) for _ in range(10)])
+        return sim
+
+    a, b = build(False), build(True)
+    assert not a.flocking and b.flocking
+    for _ in range(160):
+        a.step()
+        b.step()
+        assert _snapshot(a) == _snapshot(b)
+    assert a.queue.drained() and b.queue.drained()
+    ta = sorted(j.completed_at for j in a.queue.completed_log)
+    tb = sorted(j.completed_at for j in b.queue.completed_log)
+    assert ta == tb
+
+
+def test_negotiate_cycle_single_queue_delegates():
+    """Direct unit: negotiate_cycle([q]) makes exactly the claims
+    negotiate(q) would."""
+    def setup():
+        q, col = JobQueue(), Collector()
+        for i in range(6):
+            q.submit(Job(ad={"request_cpus": 1}, runtime_s=60), 0.0)
+        for i in range(2):
+            w = Worker(name=f"w{i}", ad={"cpus": 4},
+                       start_expr=ClassAdExpr("True"))
+            w.booted_at = 0.0
+            col.advertise(w)
+        return q, col
+
+    qa, ca = setup()
+    qb, cb = setup()
+    na = ca.negotiate(qa, 0.0)
+    nb = cb.negotiate_cycle([qb], 0.0)
+    assert na == nb == 6
+    assert [(j.jid, j.claimed_by) for j in qa.jobs()] == \
+        [(j.jid, j.claimed_by) for j in qb.jobs()]
+
+
+def test_flocking_order_without_accountant():
+    """Plain flocking drains schedds strictly in list order under
+    scarcity: the first schedd's jobs take all capacity."""
+    q0, q1, col = JobQueue(name="s0"), JobQueue(name="s1"), Collector()
+    for i in range(10):
+        q0.submit(Job(ad={"request_cpus": 1}, runtime_s=60), 0.0)
+        q1.submit(Job(ad={"request_cpus": 1}, runtime_s=60), 0.0)
+    for i in range(10):
+        w = Worker(name=f"w{i}", ad={"cpus": 1},
+                   start_expr=ClassAdExpr("True"))
+        w.booted_at = 0.0
+        col.advertise(w)
+    assert col.negotiate_cycle([q0, q1], 0.0) == 10
+    assert q0.n_running() == 10
+    assert q1.n_running() == 0
+
+
+# ---------------------------------------------------------------------------
+# Provisioner deficit fix: post-negotiation idle cohorts
+# ---------------------------------------------------------------------------
+
+def _pool_with_partial_worker():
+    """One 8-cpu worker already holding a 1-cpu claim (so the old
+    zero-claim `unclaimed_capacity` count sees NOTHING), plus 5 idle
+    1-cpu jobs the next negotiation will pack onto its free capacity."""
+    cfg = mk_cfg()
+    q, col = JobQueue(), Collector()
+    cluster = KubeCluster([Node(name="n0",
+                                capacity={"cpu": 64, "memory": 512,
+                                          "disk": 1024})])
+    prov = Provisioner(cfg, q, col, cluster)
+    w = Worker(name="w0", ad={"cpus": 8, "memory": 64, "disk": 100},
+               start_expr=cfg.start_expr())
+    w.booted_at = 0.0
+    col.advertise(w)
+    running = Job(ad={"request_cpus": 1}, runtime_s=1e4)
+    q.submit(running, 0.0)
+    for _ in range(5):
+        q.submit(Job(ad={"request_cpus": 1}, runtime_s=600), 0.0)
+    q.claim(running.jid, w.name, 0.0)
+    w.add_claim(running)
+    return q, col, prov, w
+
+
+def test_deficit_ignores_jobs_absorbed_by_partial_capacity():
+    """Regression (double-count fix): idle jobs that the current free
+    capacity will absorb in the next negotiation cycle must not be
+    provisioned for — the seed formula saw 5 idle − 0 unclaimed and
+    submitted 5 pods for jobs about to match the half-empty worker."""
+    q, col, prov, w = _pool_with_partial_worker()
+    # the old formula's inputs: demand present, zero-claim count blind
+    assert q.n_idle() == 5
+    assert col.unclaimed_capacity() == 0
+    stats = prov.reconcile(10.0)
+    assert stats.submitted == 0, \
+        "provisioned for jobs the negotiator is about to match"
+    # and the negotiator indeed absorbs all five
+    assert col.negotiate(q, 10.0) == 5
+    assert q.n_idle() == 0
+
+
+def test_deficit_still_counts_unmatchable_overflow():
+    """Only what fits is subtracted: demand beyond the worker's free
+    capacity still gets pods."""
+    q, col, prov, w = _pool_with_partial_worker()
+    for _ in range(20):   # 25 idle total now, only 7 cpus free on w
+        q.submit(Job(ad={"request_cpus": 1}, runtime_s=600), 0.0)
+    stats = prov.reconcile(10.0)
+    assert stats.submitted == 25 - 7
+    assert prov.stats.per_schedd_deficit == {"schedd": 18}
+
+
+def test_preview_matches_counts_partial_capacity():
+    q, col, prov, w = _pool_with_partial_worker()
+    preview = col.preview_matches([q], 10.0)
+    assert sum(preview[0].values()) == 5
+
+
+# ---------------------------------------------------------------------------
+# Trace splitting + concurrent multi-schedd replay
+# ---------------------------------------------------------------------------
+
+def test_split_trace_is_exact_ordered_partition():
+    trace = diurnal_day(600, seed=11, duration_s=7200.0)
+    parts = split_trace(trace, by="group", n_schedds=3)
+    assert sorted(parts) == ["schedd00", "schedd01", "schedd02"]
+    assert sum(len(p) for p in parts.values()) == len(trace)
+    seen = set()
+    for name, part in parts.items():
+        prev = -1.0
+        groups = set()
+        for rec in part.records:
+            assert rec.arrival_s >= prev
+            prev = rec.arrival_s
+            groups.add(rec.group)
+            seen.add(id(rec))
+        for g in groups:     # a label never spans two schedds
+            for other, op in parts.items():
+                if other != name:
+                    assert g not in {r.group for r in op.records}
+    assert len(seen) == len(trace)
+    # deterministic: same trace, same split
+    parts2 = split_trace(trace, by="group", n_schedds=3)
+    for name in parts:
+        assert [r.to_obj() for r in parts[name].records] == \
+            [r.to_obj() for r in parts2[name].records]
+
+
+def test_split_trace_by_label_names_schedds_after_labels():
+    trace = diurnal_day(300, seed=2, duration_s=3600.0)
+    parts = split_trace(trace, by="group")
+    assert set(parts) == {r.group for r in trace.records}
+
+
+def test_replay_flock_conserves_demand():
+    """Three schedds stream their sub-traces concurrently into one
+    federated pool; the union completes the whole trace exactly."""
+    trace = diurnal_day(400, seed=5, duration_s=7200.0)
+    parts = split_trace(trace, by="group", n_schedds=3)
+    sim = Simulation(mk_cfg(), schedds=list(parts), fairshare=True,
+                     nodes=onprem_nodes(8, gpus=8, cpus=64), tick_s=30,
+                     negotiate_interval_s=60, metrics_interval_s=300)
+    reps = replay_flock(sim, parts, coalesce_s=10.0,
+                        compact_completed=True)
+    sim.run_until_drained(max_t=5e6)
+    assert sim.drained()
+    total = sum(r.stats.completed.n for r in reps.values())
+    core_s = sum(r.stats.completed.core_seconds for r in reps.values())
+    assert total == len(trace)
+    assert core_s == pytest.approx(trace.total_core_seconds(), rel=1e-9)
+    # per-schedd and per-user gauges got recorded
+    assert sim.recorder.schedds_recorded() == sorted(parts)
+    assert sim.recorder.users_recorded()
+    for name in parts:
+        assert sim.recorder.schedd_values("idle_jobs", name)
