@@ -1,0 +1,152 @@
+"""Matchmaker backends head-to-head: one negotiation step at scale.
+
+ISSUE 6 acceptance: the jitted JAX water-fill must be >= 5x faster than
+the NumPy reference on the 100k-job tier, claim-for-claim identical.
+
+What is timed is ONE `Matchmaker.match` call — the pure negotiation
+step both backends expose behind the protocol — on the paper's
+demand >> supply shape: a large idle backlog (cohort-compressed, the
+job queue's cohort index does that for free) against a Kubernetes pool
+of a few hundred partitionable slots (bench_event_engine provisions 600
+pods for its 100k-job campaign).  Tiers scale the backlog:
+
+    tier    jobs      cohorts  workers
+    10k     10_000      512      128
+    100k    100_000    4_096      512
+    1m      1_000_000  16_384    1_024
+
+The JAX timing EXCLUDES the one-off jit trace (warmup) and INCLUDES
+host->device transfer of the cycle's arrays — it is the steady-state
+per-cycle cost a simulation pays.  `identical` is a hard gate: a fast
+wrong matchmaker fails the bench before any ratio is read.
+
+Usage:
+    python benchmarks/bench_matchmaking.py [--tiers 10k,100k,1m]
+        [--budget-s SECONDS] [--min-ratio 5] [--repeats 3]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import Timer, emit
+from repro.core.matchmaker import (
+    HAVE_JAX, MatchProblem, NumpyMatchmaker, make_matchmaker,
+)
+
+TIERS = {
+    "10k": dict(jobs=10_000, C=512, W=128),
+    "100k": dict(jobs=100_000, C=4_096, W=512),
+    "1m": dict(jobs=1_000_000, C=16_384, W=1_024),
+}
+R = 6
+
+
+def build_problem(jobs: int, C: int, W: int, seed: int = 0) -> MatchProblem:
+    """The paper regime: heterogeneous 1-4 cpu / 0-1 gpu requests,
+    cohort-compressed backlog, a pool that drains mid-cycle."""
+    rng = np.random.default_rng(seed)
+    requests = np.zeros((C, R))
+    requests[:, 0] = rng.integers(1, 5, size=C)           # cpus
+    requests[:, 1] = rng.integers(0, 2, size=C)           # gpus
+    requests[:, 2] = rng.integers(1, 9, size=C)           # memory GB
+    demand = np.full(C, jobs // C, dtype=np.int64)
+    demand[: jobs % C] += 1
+    free = np.zeros((W, R))
+    free[:, 0] = rng.integers(8, 65, size=W)
+    free[:, 1] = rng.integers(0, 9, size=W)
+    free[:, 2] = rng.integers(32, 257, size=W)
+    compat = rng.random((C, W)) < 0.9
+    return MatchProblem(
+        keys=[(0, c) for c in range(C)], requests=requests,
+        demand=demand, order=rng.permutation(C).astype(np.int64),
+        free=free, capacity=free.copy(),
+        compat=np.asarray(compat, dtype=bool))
+
+
+def best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(echo: bool = True, tiers=("10k", "100k"), repeats: int = 5):
+    ref = NumpyMatchmaker()
+    jaxmm = make_matchmaker("jax") if HAVE_JAX else None
+    out = {"have_jax": HAVE_JAX, "tiers": {}}
+    with Timer() as total:
+        for tier in tiers:
+            spec = TIERS[tier]
+            p = build_problem(**spec)
+            row = dict(spec)
+            plan_ref = ref.match(p)
+            row["claimed"] = plan_ref.claimed
+            row["numpy_s"] = best_of(lambda: ref.match(p), repeats)
+            if jaxmm is not None:
+                plan_jax = jaxmm.match(p)          # warmup: jit trace
+                row["identical"] = bool(
+                    np.array_equal(plan_ref.takes, plan_jax.takes)
+                    and np.allclose(plan_ref.free_after,
+                                    plan_jax.free_after))
+                row["jax_s"] = best_of(lambda: jaxmm.match(p), repeats)
+                row["ratio"] = round(row["numpy_s"] / row["jax_s"], 2)
+            else:
+                row["identical"] = None
+                row["jax_s"] = row["ratio"] = None
+            out["tiers"][tier] = row
+    out["wall_s"] = round(total.s, 2)
+    emit("matchmaking", out, echo=echo)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiers", default="10k,100k",
+                    help="comma list from 10k,100k,1m")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail if the whole bench exceeds this wall time")
+    ap.add_argument("--min-ratio", type=float, default=None,
+                    help="fail if the jax/numpy speedup at the largest "
+                         "requested tier is below this")
+    args = ap.parse_args(argv)
+    tiers = [t.strip() for t in args.tiers.split(",") if t.strip()]
+    unknown = [t for t in tiers if t not in TIERS]
+    if unknown:
+        print(f"[bench] unknown tiers {unknown}; known: {sorted(TIERS)}",
+              file=sys.stderr)
+        return 2
+    out = run(echo=True, tiers=tiers, repeats=args.repeats)
+    rc = 0
+    for tier in tiers:
+        row = out["tiers"][tier]
+        if row["identical"] is False:
+            print(f"[bench] FAIL: jax plan diverges from the reference "
+                  f"at tier {tier}", file=sys.stderr)
+            rc = 1
+    top = out["tiers"][tiers[-1]]
+    if args.min_ratio is not None:
+        if top["ratio"] is None:
+            print("[bench] FAIL: --min-ratio given but jax unavailable",
+                  file=sys.stderr)
+            rc = 1
+        elif top["ratio"] < args.min_ratio:
+            print(f"[bench] FAIL: jax speedup {top['ratio']}x < "
+                  f"{args.min_ratio}x at tier {tiers[-1]}",
+                  file=sys.stderr)
+            rc = 1
+    if args.budget_s is not None and out["wall_s"] > args.budget_s:
+        print(f"[bench] FAIL: wall {out['wall_s']}s > budget "
+              f"{args.budget_s}s", file=sys.stderr)
+        rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,14 @@ from repro.core.jobqueue import (
     FlockedQueues, Job, JobQueue, JobState, cohort_key_of, user_of,
 )
 from repro.core.cluster import KubeCluster, Node, Pod, PodPhase
-from repro.core.worker import Collector, Worker, advance_workers, kill_worker
+from repro.core.matchmaker import (
+    HAVE_JAX, JaxMatchmaker, MatchPlan, MatchProblem, Matchmaker,
+    NumpyMatchmaker, RESOURCE_KEYS, ScanMatchmaker, make_matchmaker,
+    matchmaker_names, register_matchmaker,
+)
+from repro.core.worker import (
+    Collector, LRUCache, Worker, advance_workers, kill_worker,
+)
 from repro.core.groups import GroupSignature, group_jobs, signature_of
 from repro.core.config import (
     BackendConfig, ProvisionerConfig, dump_ini, load_ini, PAPER_EXAMPLE_INI,

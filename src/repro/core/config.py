@@ -111,6 +111,9 @@ class ProvisionerConfig:
     startup_delay_s: float = 30.0
     group_extra_keys: tuple[str, ...] = ("arch",)
     routing_policy: str = "fill-first"            # backend deficit split
+    matchmaker: str = "numpy"                     # negotiation backend
+    #   ("numpy" reference | "jax" jitted | "scan" per-job oracle;
+    #    see core/matchmaker)
 
     # [backend:<name>] sections (empty ⇒ single default backend)
     backends: tuple[BackendConfig, ...] = ()
@@ -159,6 +162,7 @@ def load_ini(text: str) -> ProvisionerConfig:
         if sec.get("group_extra_keys_list"):
             cfg.group_extra_keys = _parse_list(sec["group_extra_keys_list"])
         cfg.routing_policy = sec.get("routing_policy", cfg.routing_policy)
+        cfg.matchmaker = sec.get("matchmaker", cfg.matchmaker)
 
     if "k8s" in cp:
         sec = cp["k8s"]
@@ -240,6 +244,7 @@ def dump_ini(cfg: ProvisionerConfig) -> str:
         f"startup_delay_s={cfg.startup_delay_s}",
         f"group_extra_keys_list={','.join(cfg.group_extra_keys)}",
         f"routing_policy={cfg.routing_policy}",
+        f"matchmaker={cfg.matchmaker}",
         "",
         "[k8s]",
         f"k8s_domain={cfg.k8s_domain}",

@@ -25,7 +25,7 @@ out slots inside one cycle.
 
 `Accountant` wires a ledger pair to any number of `JobQueue`s via the
 queue's claim/complete/release hooks and answers the two questions the
-negotiation cycle (worker.py `negotiate_cycle`) asks while
+negotiation cycle (worker.py `run_cycle`) asks while
 water-filling capacity:
 
   * ``effective_priority(user)`` — factor × (base + decayed cores +
@@ -120,6 +120,34 @@ class UsageLedger:
 
     def keys(self) -> list[str]:
         return sorted(set(self._usage) | set(self._rate))
+
+    # -- persistence ---------------------------------------------------------
+    def state_dict(self) -> dict[str, Any]:
+        """Plain-dict persistable state (JSON-safe: str keys, floats).
+        The raw (usage, rate, last-settle) triples reproduce the ledger
+        EXACTLY — no settling happens, so a dump/load round-trip is
+        bitwise-neutral at any later query time."""
+        return {
+            "half_life_s": self.half_life_s,
+            "usage": dict(self._usage),
+            "rate": dict(self._rate),
+            "t": dict(self._t),
+        }
+
+    def load_state(self, state: dict[str, Any]):
+        """Inverse of `state_dict` (e.g. after a json.loads round-trip);
+        replaces all ledger contents."""
+        hl = float(state.get("half_life_s", self.half_life_s))
+        if not hl > 0:
+            raise ValueError(f"half_life_s must be positive, got {hl}")
+        self.half_life_s = hl
+        self.tau = hl / LN2
+        self._usage = {str(k): float(v)
+                       for k, v in state.get("usage", {}).items()}
+        self._rate = {str(k): float(v)
+                      for k, v in state.get("rate", {}).items()}
+        self._t = {str(k): float(v)
+                   for k, v in state.get("t", {}).items()}
 
 
 @dataclasses.dataclass
@@ -232,9 +260,45 @@ class Accountant:
                  + self._vgroup.get(schedd, 0.0))
         return cores / self.quota(schedd)
 
+    # -- persistence ---------------------------------------------------------
+    def state_dict(self) -> dict[str, Any]:
+        """Everything needed to rebuild this accountant in a fresh
+        process — plain dicts, JSON-safe.  Virtual within-cycle charges
+        are deliberately NOT part of the state: they only exist inside
+        one negotiation cycle and a restored accountant starts outside
+        of any."""
+        return {
+            "base_priority": self.base_priority,
+            "default_factor": self.default_factor,
+            "factors": dict(self.factors),
+            "quotas": dict(self.quotas),
+            "users": self.users.state_dict(),
+            "groups": self.groups.state_dict(),
+        }
+
+    def restore(self, state: dict[str, Any]):
+        """Load a `state_dict()` — or a full `snapshot()` carrying one
+        under its "state" key (snapshots stay directly restorable after
+        a JSON round-trip).  Priority queries afterwards are identical
+        to the source accountant's."""
+        inner = state.get("state")
+        if isinstance(inner, dict) and "users" in inner:
+            state = inner
+        self.base_priority = float(
+            state.get("base_priority", self.base_priority))
+        self.default_factor = float(
+            state.get("default_factor", self.default_factor))
+        self.factors = {str(k): float(v)
+                        for k, v in state.get("factors", {}).items()}
+        self.quotas = {str(k): float(v)
+                       for k, v in state.get("quotas", {}).items()}
+        self.users.load_state(state.get("users", {}))
+        self.groups.load_state(state.get("groups", {}))
+        self.reset_cycle()
+
     # -- introspection (metrics / tests) -------------------------------------
     def snapshot(self, now: float) -> dict[str, Any]:
-        return {
+        out = {
             "users": {
                 u: {
                     "effective_cores": round(
@@ -256,6 +320,10 @@ class Accountant:
                 for s in self.groups.keys()
             },
         }
+        # the persistable half rides along so `json.dumps(snapshot)` is
+        # both a metrics record AND a restore point (see `restore`)
+        out["state"] = self.state_dict()
+        return out
 
 
 def make_schedd_specs(schedds: int | Iterable) -> list[ScheddSpec]:

@@ -5,7 +5,7 @@ Reconciliation loop (C1), run every ``submit_interval_s``:
   1. snapshot idle jobs ACROSS EVERY SCHEDD feeding the pool; keep
      those passing the job filter (C3)
   2. subtract what the next negotiation cycle will absorb anyway: a
-     claim-free dry run (`Collector.preview_matches`) of the idle
+     claim-free dry run (`Collector.preview`) of the idle
      cohorts against current free capacity — including partial slots —
      leaves the POST-negotiation idle demand (the old unclaimed-worker
      count double-counted jobs about to match existing capacity)
@@ -178,7 +178,7 @@ class Provisioner:
         Iterates each queue's idle COHORTS (one ClassAd filter
         evaluation and one signature derivation per distinct ad — a
         100k-job uniform campaign costs two dict lookups, not 200k
-        expression evals) and subtracts what `Collector.preview_matches`
+        expression evals) and subtracts what `Collector.preview`
         says the next negotiation cycle will absorb with capacity that
         already exists.  Returns ``(counts, by_schedd, legacy)`` where
         `legacy` flags the foreign-queue fallback (pre-negotiation
@@ -197,7 +197,7 @@ class Provisioner:
                     per = by_schedd.setdefault(sig, {})
                     per[name] = per.get(name, 0) + len(jobs)
             return counts, by_schedd, True
-        previews = self.collector.preview_matches(self.queues, now)
+        previews = self.collector.preview(self.queues, now)
         for qi, q in enumerate(self.queues):
             absorbed = previews[qi]
             name = self._schedd_name(qi)

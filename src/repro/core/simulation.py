@@ -37,7 +37,7 @@ declaring `[backend:<name>]` sections.
 Multi-schedd flocking: `schedds=N` (or a list of `ScheddSpec`s with
 quotas and per-user priority factors) builds N submit-host queues
 sharing one pool-unique jid counter, negotiated as ONE cycle in
-flocking order (`Collector.negotiate_cycle`); `fairshare=True` (or an
+flocking order (`Collector.run_cycle`); `fairshare=True` (or an
 `Accountant`) adds hierarchical fair-share — per-schedd quotas, then
 per-user effective priority with usage decay.  The single-queue
 construction path is untouched (`sim.queue` keeps meaning the first/
@@ -106,6 +106,7 @@ class Simulation:
         schedds: int | list | None = None,
         fairshare: Accountant | bool | None = None,
         negotiate_quantum: int = 1,
+        matchmaker=None,
     ):
         if engine not in ("event", "tick"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -123,7 +124,7 @@ class Simulation:
         self.flocking = schedds is not None or fairshare is not None
         self.negotiate_quantum = negotiate_quantum
         if fairshare and engine == "tick":
-            # the tick engine's negotiate_scan is the seed oracle and
+            # the tick engine's scan_cycle is the seed oracle and
             # knows nothing of the accountant — silently dropping the
             # configured fair-share would be worse than refusing
             raise ValueError(
@@ -151,7 +152,12 @@ class Simulation:
             self.accountant = None
             self.pool_queue = self.queues[0]
         self.queue = self.queues[0]
-        self.collector = Collector()
+        # negotiation backend: the explicit arg wins, else the INI
+        # `[provision] matchmaker=` key (core/matchmaker — "numpy"
+        # reference, "jax" jitted, "scan" oracle, or an instance)
+        if matchmaker is None:
+            matchmaker = getattr(cfg, "matchmaker", None)
+        self.collector = Collector(matchmaker=matchmaker)
         if backends is None:
             # single-backend compatibility adapter (seed signature)
             cluster = KubeCluster(nodes or [])
@@ -222,11 +228,11 @@ class Simulation:
     def _negotiate_cb(self, now: float):
         self._last_negotiate = now
         if self.flocking:
-            self.collector.negotiate_cycle(
+            self.collector.run_cycle(
                 self.queues, now, accountant=self.accountant,
                 quantum=self.negotiate_quantum)
         else:
-            self.collector.negotiate(self.queue, now)
+            self.collector.run_cycle(self.queue, now)
 
     def _straggler_cb(self, now: float):
         self.straggler_policy.tick(self.pool_queue, self.collector,
@@ -466,7 +472,7 @@ class Simulation:
             # seed's per-job oracle (candidates re-listed per queue so
             # partial capacity carries across schedds via live offers)
             for q in self.queues:
-                self.collector.negotiate_scan(q, now)
+                self.collector.scan_cycle(q, now)
             self._last_negotiate = now
 
         # 5. workers advance (per-job idle polling, tick-quantized

@@ -12,34 +12,52 @@ Partitionable-slot semantics: a worker claims as many jobs as fit its
 resources simultaneously (cpus/gpus/chips), like a partitionable startd
 slot — one pod can serve several 1-GPU jobs on an 8-GPU request.
 
-The collector is the pool registry; `negotiate()` is a single matchmaking
-cycle pairing idle jobs with unclaimed worker capacity (symmetric_match:
-job.Requirements against the worker ad AND the worker START against the
-job ad).
+The collector is the pool registry; `run_cycle()` is a single
+matchmaking cycle pairing idle jobs with unclaimed worker capacity
+(symmetric_match: job.Requirements against the worker ad AND the worker
+START against the job ad).
 
-Scale: `negotiate()` is vectorized over the queue's idle COHORTS
-(jobqueue.py) — jobs with identical ads share one ClassAd evaluation per
-worker, and how many cohort jobs fit each worker comes from a NumPy
-free-resource matrix instead of per-job Python loops.  Expression results
-for unclaimed workers are memoized in the collector (pure functions of
-the two ads), which also makes the C2 idle poll in `advance_workers` a
-cohort-count scan.  `negotiate_scan()` keeps the seed's per-job loop as
-the differential-test oracle and the benchmark baseline.
+Negotiation architecture (core/matchmaker/): the cycle splits into a
+*pure* array core and the stateful glue that stays here.
 
-Flocking (multi-schedd): `negotiate_cycle()` runs ONE matchmaking cycle
-over an ordered list of schedd queues feeding the same pool — capacity
-drains through a shared free-resource matrix, plain mode serves queues
+  * `Collector._build_problem` turns live queues + workers into a
+    `MatchProblem` — request/demand/free matrices plus a (cohort ×
+    worker) compatibility mask evaluated ONCE per (cohort, slot shape)
+    through the bounded LRU memo (`cohort_match` semantics: the mask
+    holds full-ad verdicts, and the matchmakers' fits>0 gate supplies
+    the live-offer quantity check, so the pair is equivalent to
+    evaluating each shrinking offer for quantity-blind expressions).
+  * a swappable `Matchmaker` backend solves it — "numpy" (the legacy
+    vectorized loop, reference), "jax" (jitted XLA water-fill), "scan"
+    (the seed's per-job oracle) — selected via
+    `Collector(matchmaker=...)` / `Simulation(matchmaker=...)` / the
+    `[provision] matchmaker=` INI key.
+  * `Collector._apply_plan` turns the plan back into state: queue
+    claims, worker claim vectors, fair-share charges.
+
+Expressions that READ offered quantities (e.g. ``gpus >= 2``) cannot be
+block-evaluated once per cycle; cycles containing any such cohort or
+worker fall back to the legacy per-claim path (`_match_cohorts`), which
+re-evaluates against every shrinking offer — exactness over speed.
+
+Flocking (multi-schedd): `run_cycle(queues, ...)` runs ONE matchmaking
+cycle over an ordered list of schedd queues feeding the same pool —
+capacity drains through a shared free matrix, plain mode serves queues
 strictly in flocking order, and with a fair-share `Accountant`
 (core/fairshare.py) the cycle water-fills capacity by per-schedd quota
-and per-user effective priority instead.  `preview_matches()` is the
-claim-free dry run the provisioner subtracts from idle counts so it
-never provisions for jobs the next cycle will match anyway.
+and per-user effective priority in quantum-sized `match(budget=...)`
+slices.  `preview()` is the claim-free dry run the provisioner
+subtracts from idle counts so it never provisions for jobs the next
+cycle will match anyway.  `negotiate`, `negotiate_scan`, and
+`preview_matches` remain as deprecated shims over the new entry points.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any
+import warnings
+from collections import OrderedDict
+from typing import Any, Callable
 
 import numpy as np
 
@@ -48,8 +66,13 @@ from repro.core.fairshare import job_cores
 from repro.core.jobqueue import (
     Job, JobQueue, JobState, canonical_ad, user_of,
 )
+from repro.core.matchmaker import (
+    MatchPlan, MatchProblem, Matchmaker, cohort_fits, make_matchmaker,
+)
+from repro.core.matchmaker.base import RESOURCE_KEYS  # noqa: F401
+#   (re-exported: RESOURCE_KEYS moved to matchmaker.base with the
+#   protocol split; long-standing importers keep working)
 
-RESOURCE_KEYS = ("cpus", "gpus", "memory", "disk", "chips", "hbm_gb")
 # offer-ad attributes whose values shrink as a slot fills; expressions
 # reading them cannot be block-evaluated once per negotiation cycle
 _QUANTITY_ATTRS = frozenset(RESOURCE_KEYS)
@@ -67,6 +90,56 @@ def _job_req_vec(job: Job) -> np.ndarray:
                       for r in RESOURCE_KEYS], dtype=np.float64)
         job._req_vec = v
     return v
+
+
+class LRUCache:
+    """Bounded memo with least-recently-used eviction.
+
+    The collector's ClassAd-eval memos used to reset wholesale when
+    full; week-long streaming replays with churning cohorts now evict
+    one cold entry at a time instead, and `invalidate` drops entries
+    selectively (e.g. every verdict involving one cohort)."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = int(maxsize)
+        self._d: OrderedDict = OrderedDict()
+
+    def get(self, key, default=None):
+        try:
+            value = self._d[key]
+        except KeyError:
+            return default
+        self._d.move_to_end(key)
+        return value
+
+    def put(self, key, value):
+        d = self._d
+        if key in d:
+            d.move_to_end(key)
+        d[key] = value
+        if len(d) > self.maxsize:
+            d.popitem(last=False)
+
+    def invalidate(self, match: Callable[[Any], bool] | None = None) -> int:
+        """Drop entries whose key satisfies `match` (all, when None).
+        Returns how many were dropped."""
+        if match is None:
+            n = len(self._d)
+            self._d.clear()
+            return n
+        stale = [k for k in self._d if match(k)]
+        for k in stale:
+            del self._d[k]
+        return len(stale)
+
+    def clear(self):
+        self._d.clear()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
 
 
 @dataclasses.dataclass
@@ -151,25 +224,44 @@ class Worker:
 class Collector:
     """Pool registry + negotiator."""
 
-    MATCH_CACHE_MAX = 100_000    # entries; reset-on-full (pure cache)
+    MATCH_CACHE_MAX = 100_000    # LRU entries (per-cohort×shape verdicts)
 
-    def __init__(self):
+    def __init__(self, matchmaker: str | Matchmaker | None = None):
         self.workers: dict[str, Worker] = {}
         self._ids = itertools.count()
+        self.matchmaker: Matchmaker = make_matchmaker(matchmaker)
+        self._scan_oracle: Matchmaker = make_matchmaker("scan")
         # (job cohort, worker slot shape) -> bool; symmetric_match is a
-        # pure function of the two ads, so entries never invalidate
-        self._match_cache: dict[tuple, bool] = {}
+        # pure function of the two ads, so entries never go stale on
+        # their own — the LRU bound handles cohort churn, and
+        # `invalidate_cohort` handles callers that mutate ads in place
+        self._match_cache = LRUCache(self.MATCH_CACHE_MAX)
         # C2 idle-poll verdicts per SLOT SHAPE: {match_key: (idle-cohort
         # version, any-match verdict)} — valid until the idle-cohort SET
         # changes; a pool of identical idle workers polls once per
         # version, not once per worker per event
-        self._poll_cache: dict[tuple, tuple[int, bool]] = {}
+        self._poll_cache = LRUCache(self.MATCH_CACHE_MAX)
 
     def advertise(self, worker: Worker):
         self.workers[worker.name] = worker
 
     def invalidate(self, name: str):
         self.workers.pop(name, None)
+
+    def invalidate_cohort(self, cohort_key=None) -> int:
+        """Explicitly drop memoized ClassAd verdicts: all of them, or
+        only entries involving `cohort_key`.  Call on a cohort-version
+        bump whose ads were mutated in place (the caches are otherwise
+        pure and only ever LRU-evicted).  Returns entries dropped."""
+        if cohort_key is None:
+            n = self._match_cache.invalidate()
+        else:
+            n = self._match_cache.invalidate(
+                lambda k: k[0] == cohort_key)
+        # poll verdicts aggregate over cohorts; any cohort change can
+        # flip them regardless of the idle_version guard
+        self._poll_cache.invalidate()
+        return n
 
     def alive_workers(self, now: float) -> list[Worker]:
         return [w for w in self.workers.values() if w.ready(now)]
@@ -193,16 +285,20 @@ class Collector:
         if worker.claimed:
             return symmetric_match(rep.ad, worker.offer_ad(),
                                    rep.requirements, worker.start_expr)
+        return self._shape_match(rep, worker)
+
+    def _shape_match(self, rep: Job, worker: Worker) -> bool:
+        """Memoized FULL-AD verdict for (cohort, slot shape) — the
+        compatibility-mask entry.  Combined with the matchmakers'
+        fits>0 gate this equals the live-offer verdict whenever the
+        expressions are quantity-blind (the only cycles routed to the
+        array backends)."""
         key = (rep.cohort_key, worker.match_key())
         hit = self._match_cache.get(key)
         if hit is None:
             hit = symmetric_match(rep.ad, worker.ad, rep.requirements,
                                   worker.start_expr)
-            if len(self._match_cache) >= self.MATCH_CACHE_MAX:
-                # pathological per-job cohorts (e.g. trace replay with
-                # unique ads): stop the memo growing without bound
-                self._match_cache.clear()
-            self._match_cache[key] = hit
+            self._match_cache.put(key, hit)
         return hit
 
     def any_cohort_matches(self, worker: Worker, queue: JobQueue) -> bool:
@@ -228,50 +324,405 @@ class Collector:
                 hit = True
                 break
         if cacheable:
-            if len(self._poll_cache) >= self.MATCH_CACHE_MAX:
-                self._poll_cache.clear()
-            self._poll_cache[worker.match_key()] = (version, hit)
+            self._poll_cache.put(worker.match_key(), (version, hit))
         return hit
 
-    def negotiate(self, queue: JobQueue, now: float) -> int:
-        """One vectorized matchmaking cycle. Returns number of new claims.
+    # -- problem building / plan application (the stateful half) -------------
+    def _quantity_sensitive(self, reps, workers) -> bool:
+        """Any expression in the cycle reading offered quantities forces
+        the legacy per-claim path — block evaluation would miss the
+        shrinking-offer rechecks."""
+        for w in workers:
+            qs = w.__dict__.get("_qsens")
+            if qs is None:
+                qs = bool(w.start_expr.refs & _QUANTITY_ATTRS)
+                w._qsens = qs
+            if qs:
+                return True
+        for rep in reps:
+            req = rep.requirements
+            if req is not None and (req.refs & _QUANTITY_ATTRS):
+                return True
+        return False
 
-        Cohorts are served earliest-submitter-first; per cohort, a NumPy
-        mask over the worker free-resource matrix yields how many cohort
-        jobs each candidate can absorb, and claims are handed out in
-        worker advertisement order (the seed's first-match rule).
+    def _build_problem(self, rows, workers, *,
+                       scan_jobs=None) -> MatchProblem:
+        """Assemble the pure arrays from live state.  `rows` is the
+        cohort list [(queue idx, cohort key, jobs dict), ...] ALREADY in
+        processing order; the compat mask is evaluated once per
+        (cohort, distinct slot shape) through the LRU memo, then
+        broadcast to worker columns."""
+        C, W = len(rows), len(workers)
+        R = len(RESOURCE_KEYS)
+        keys = []
+        reps = []
+        requests = np.zeros((C, R), dtype=np.float64)
+        demand = np.zeros(C, dtype=np.int64)
+        for c, (qi, key, jobs) in enumerate(rows):
+            rep = next(iter(jobs.values()))
+            keys.append((qi, key))
+            reps.append(rep)
+            requests[c] = _job_req_vec(rep)
+            demand[c] = len(jobs)
+        free = np.stack([w.free_vec() for w in workers])
+        capacity = np.stack([w.res_vec() for w in workers])
+        # distinct slot shapes -> one expression eval per (cohort, shape)
+        shape_of = np.zeros(W, dtype=np.int64)
+        shape_reps: list[Worker] = []
+        shape_idx: dict = {}
+        for wi, w in enumerate(workers):
+            mk = w.match_key()
+            si = shape_idx.get(mk)
+            if si is None:
+                si = shape_idx[mk] = len(shape_reps)
+                shape_reps.append(w)
+            shape_of[wi] = si
+        compat_s = np.zeros((C, len(shape_reps)), dtype=bool)
+        for c, rep in enumerate(reps):
+            for si, w in enumerate(shape_reps):
+                compat_s[c, si] = self._shape_match(rep, w)
+        scan_order = None
+        if scan_jobs is not None:
+            row_of = {key: c for c, (_qi, key, _j) in enumerate(rows)}
+            scan_order = np.array(
+                [row_of[j.cohort_key] for j in scan_jobs], dtype=np.int64)
+        return MatchProblem(
+            keys=keys, requests=requests, demand=demand,
+            order=np.arange(C, dtype=np.int64), free=free,
+            capacity=capacity, compat=compat_s[:, shape_of],
+            scan_order=scan_order)
 
-        FIFO is COHORT-granular: the cohort holding the oldest idle job
-        drains before newer cohorts see capacity, like HTCondor's
-        autocluster-batched negotiation.  Under scarce capacity this can
-        differ from `negotiate_scan`'s per-job interleaving (a later job
-        of the oldest cohort may beat an earlier job of a newer one) —
-        the price of evaluating matchmaking once per cohort instead of
-        once per job."""
-        if not hasattr(queue, "idle_cohorts"):
-            # foreign queue exposing only the seed surface: per-job scan
-            # (mirrors Provisioner._idle_group_counts' fallback)
-            return self.negotiate_scan(queue, now)
-        cohorts = [(key, jobs) for key, jobs in queue.idle_cohorts() if jobs]
-        if not cohorts:
-            return 0
+    def _apply_plan(self, queues, problem: MatchProblem, plan: MatchPlan,
+                    workers, now: float, *, on_claim=None) -> int:
+        """Turn a pure plan into state: claim each cohort's FIFO jobs to
+        its workers in index order.  Free capacity only shrinks within a
+        cycle, so a cohort's first-fit worker index is non-decreasing —
+        dealing FIFO jobs to index-ordered workers reproduces the exact
+        (job, worker) pairs of the legacy claiming walks."""
+        claims = 0
+        takes = plan.takes
+        for c in problem.order:
+            row = takes[c]
+            total = int(row.sum())
+            if total <= 0:
+                continue
+            qi, key = problem.keys[c]
+            q = queues[qi]
+            pending = q.cohort_jobs_sorted(key, total)
+            ji = 0
+            for wi in np.nonzero(row)[0]:
+                w = workers[wi]
+                for job in pending[ji:ji + int(row[wi])]:
+                    q.claim(job.jid, w.name, now)
+                    w.add_claim(job)
+                    if on_claim is not None:
+                        on_claim(job)
+                    ji += 1
+                w.idle_since = -1.0
+            claims += ji
+        return claims
+
+    # -- negotiation entry points (the Matchmaker-backed API) ----------------
+    def run_cycle(self, queues, now: float, *, accountant=None,
+                  quantum: int = 1) -> int:
+        """One matchmaking cycle; THE canonical negotiation entry point.
+
+        `queues` is a single schedd queue or the flocking-ordered list of
+        them.  Without an accountant, queues drain strictly in that
+        order (FIFO cohorts within each) against one shared free matrix;
+        with an `Accountant` the cycle water-fills hierarchically — most
+        owed schedd, then best-priority user, `quantum` claims per slice
+        (see core/fairshare.py).  Returns the number of new claims."""
+        if hasattr(queues, "claim"):
+            queues = [queues]
+        else:
+            queues = list(queues)
+        if accountant is None:
+            return self._plain_cycle(queues, now)
+        return self._fairshare_cycle(queues, now, accountant, quantum)
+
+    def negotiate_cycle(self, queues, now: float, *, accountant=None,
+                        quantum: int = 1) -> int:
+        """Alias of `run_cycle` (the pre-protocol flocking name)."""
+        return self.run_cycle(queues, now, accountant=accountant,
+                              quantum=quantum)
+
+    def _plain_cycle(self, queues, now: float) -> int:
         workers = self.alive_workers(now)
         if not workers:
             return 0
-        free = np.stack([w.free_vec() for w in workers])
-        cohorts.sort(key=lambda kv: queue.cohort_first_submit(kv[0]))
-        return self._match_cohorts(queue, cohorts, workers, free, now)
+        if any(not hasattr(q, "idle_cohorts") for q in queues):
+            # foreign queues exposing only the seed surface negotiate
+            # per-job against live offers; cohort-capable queues before/
+            # after them see the drained capacity via fresh free vectors
+            total = 0
+            for q in queues:
+                if hasattr(q, "idle_cohorts"):
+                    total += self._plain_cycle([q], now)
+                else:
+                    total += self.scan_cycle(q, now)
+            return total
+        rows = []
+        for qi, q in enumerate(queues):
+            cohorts = [(k, j) for k, j in q.idle_cohorts() if j]
+            cohorts.sort(key=lambda kv: q.cohort_first_submit(kv[0]))
+            rows.extend((qi, k, j) for k, j in cohorts)
+        if not rows:
+            return 0
+        reps = [next(iter(j.values())) for _qi, _k, j in rows]
+        if self._quantity_sensitive(reps, workers):
+            free = np.stack([w.free_vec() for w in workers])
+            total = 0
+            for qi, q in enumerate(queues):
+                cohorts = [(k, j) for rqi, k, j in rows if rqi == qi]
+                total += self._match_cohorts(q, cohorts, workers, free,
+                                             now)
+            return total
+        problem = self._build_problem(rows, workers)
+        plan = self.matchmaker.match(problem)
+        return self._apply_plan(queues, problem, plan, workers, now)
 
+    def _fairshare_cycle(self, queues, now: float, accountant,
+                         quantum: int) -> int:
+        workers = self.alive_workers(now)
+        if not workers:
+            return 0
+        accountant.reset_cycle()
+        names = [getattr(q, "name", f"schedd{i:02d}")
+                 for i, q in enumerate(queues)]
+        rows = []
+        group_of = []                       # (schedd idx, user) per row
+        for qi, q in enumerate(queues):
+            cohorts = [(k, j) for k, j in q.idle_cohorts() if j]
+            cohorts.sort(key=lambda kv: q.cohort_first_submit(kv[0]))
+            for k, j in cohorts:
+                rows.append((qi, k, j))
+                group_of.append((qi, user_of(next(iter(j.values())))))
+        if not rows:
+            return 0
+        reps = [next(iter(j.values())) for _qi, _k, j in rows]
+        quantum = max(1, int(quantum))
+        total = 0
+
+        if self._quantity_sensitive(reps, workers):
+            # legacy per-claim ladder: identical water-fill, with the
+            # shrinking-offer expression rechecks the array path can't do
+            free = np.stack([w.free_vec() for w in workers])
+            active: dict[tuple[int, str], list] = {}
+            for (si, user), (qi, k, j) in zip(group_of, rows):
+                active.setdefault((si, user), []).append((k, j))
+            total = self._fairshare_ladder(
+                queues, names, active, workers, free, now, accountant,
+                quantum,
+                match=lambda q, cohorts, budget, observe: (
+                    self._match_cohorts(q, cohorts, workers, free, now,
+                                        budget=budget, on_claim=observe)))
+            accountant.reset_cycle()
+            return total
+
+        problem = self._build_problem(rows, workers)
+        group_rows: dict[tuple[int, str], list[int]] = {}
+        for c, g in enumerate(group_of):
+            group_rows.setdefault(g, []).append(c)
+        C = problem.n_cohorts
+        while group_rows:
+            si = min({i for i, _ in group_rows},
+                     key=lambda i: (accountant.group_owed(names[i], now),
+                                    i))
+            user = min((u for i, u in group_rows if i == si),
+                       key=lambda u: (
+                           accountant.effective_priority(u, now), u))
+            cores = [0.0]
+
+            def observe(job, _c=cores):
+                _c[0] += job_cores(job)
+
+            mask = np.zeros(C, dtype=bool)
+            mask[group_rows[(si, user)]] = True
+            plan = self.matchmaker.match(problem, budget=quantum,
+                                         active=mask)
+            got = self._apply_plan(queues, problem, plan, workers, now,
+                                   on_claim=observe)
+            problem.free = plan.free_after
+            problem.demand = problem.demand - plan.per_cohort()
+            if got:
+                accountant.charge_virtual(names[si], user, cores[0])
+                total += got
+            if got < quantum:
+                # demand or matching capacity exhausted for this user —
+                # neither can grow within the cycle, so retire the entry
+                del group_rows[(si, user)]
+        # claims are real running-core rates now; outside-the-cycle
+        # priority queries (metrics, owed-share deficits) must not see
+        # stale virtual charges on top of them
+        accountant.reset_cycle()
+        return total
+
+    def _fairshare_ladder(self, queues, names, active, workers, free,
+                          now, accountant, quantum, *, match) -> int:
+        """The water-fill loop shared by the legacy fallback: argmin
+        schedd by owed share, argmin user by effective priority, one
+        quantum-capped slice each, retire on exhaustion."""
+        total = 0
+        while active:
+            si = min({i for i, _ in active},
+                     key=lambda i: (accountant.group_owed(names[i], now),
+                                    i))
+            user = min((u for i, u in active if i == si),
+                       key=lambda u: (
+                           accountant.effective_priority(u, now), u))
+            cores = [0.0]
+
+            def observe(job, _c=cores):
+                _c[0] += job_cores(job)
+
+            got = match(queues[si], active[(si, user)], quantum, observe)
+            if got:
+                accountant.charge_virtual(names[si], user, cores[0])
+                total += got
+            if got < quantum:
+                del active[(si, user)]
+        return total
+
+    def preview(self, queues, now: float) -> list[dict]:
+        """Dry-run of the next negotiation cycle through the pure
+        matchmaker: how many of each cohort's idle jobs CURRENT free
+        capacity would absorb, without claiming anything.  Returns one
+        {cohort_key: absorbed} dict per queue.  The provisioner computes
+        deficits from the remaining (post-negotiation) idle cohorts, so
+        a job about to be matched to existing capacity — including
+        partial slots the old unclaimed-worker count missed — is not
+        provisioned for again.
+
+        Estimate caveat: quantity-reading START/Requirements expressions
+        are evaluated against the live offer, not the virtually-drained
+        one (legacy fallback path), so the preview can over-count
+        absorption for such policies by at most one cohort slice per
+        worker."""
+        if hasattr(queues, "claim"):
+            queues = [queues]
+        else:
+            queues = list(queues)
+        out: list[dict] = [{} for _ in queues]
+        workers = self.alive_workers(now)
+        if not workers:
+            return out
+        entries = []
+        for qi, q in enumerate(queues):
+            if not hasattr(q, "idle_cohorts"):
+                continue          # foreign queue: no preview possible
+            for key, jobs in q.idle_cohorts():
+                if jobs:
+                    entries.append(
+                        (q.cohort_first_submit(key), qi, key, jobs))
+        if not entries:
+            return out
+        entries.sort(key=lambda e: (e[0], e[1]))
+        rows = [(qi, key, jobs) for _first, qi, key, jobs in entries]
+        reps = [next(iter(j.values())) for _qi, _k, j in rows]
+        if self._quantity_sensitive(reps, workers):
+            return self._preview_legacy(queues, rows, workers)
+        problem = self._build_problem(rows, workers)
+        plan = self.matchmaker.match(problem)
+        per = plan.per_cohort()
+        for c, (qi, key, _jobs) in enumerate(rows):
+            if per[c]:
+                out[qi][key] = int(per[c])
+        return out
+
+    def _preview_legacy(self, queues, rows, workers) -> list[dict]:
+        """Pre-protocol preview walk, kept for quantity-reading
+        expressions (live-offer evals; see the caveat on `preview`)."""
+        out: list[dict] = [{} for _ in queues]
+        free = np.stack([w.free_vec() for w in workers])
+        for qi, key, jobs in rows:
+            rep = next(iter(jobs.values()))
+            want = _job_req_vec(rep)
+            fits = cohort_fits(free, want, len(jobs))
+            if fits.sum() <= 0:
+                continue
+            left = len(jobs)
+            absorbed = 0
+            for wi, w in enumerate(workers):
+                if left <= 0:
+                    break
+                k = int(fits[wi])
+                if k <= 0:
+                    continue
+                if not self.cohort_match(rep, w):
+                    continue
+                take = min(k, left)
+                free[wi] -= want * take
+                absorbed += take
+                left -= take
+            if absorbed:
+                out[qi][key] = absorbed
+        return out
+
+    def scan_cycle(self, queue: JobQueue, now: float) -> int:
+        """The seed's per-job FIFO cycle behind the protocol — the
+        tick-engine baseline and the oracle for differential tests.
+        Cohort-capable queues with quantity-blind expressions route
+        through `ScanMatchmaker` on the pure problem; anything else runs
+        the seed loop verbatim against live offers."""
+        workers = self.alive_workers(now)
+        if not workers:
+            return 0
+        if not hasattr(queue, "idle_cohorts"):
+            return self._scan_legacy(queue, now)
+        rows = [(0, k, j) for k, j in queue.idle_cohorts() if j]
+        if not rows:
+            return 0
+        reps = [next(iter(j.values())) for _qi, _k, j in rows]
+        if self._quantity_sensitive(reps, workers):
+            return self._scan_legacy(queue, now)
+        idle = sorted(queue.idle_jobs(), key=lambda j: j.submitted_at)
+        problem = self._build_problem(rows, workers, scan_jobs=idle)
+        plan = self._scan_oracle.match(problem)
+        return self._apply_plan([queue], problem, plan, workers, now)
+
+    def _scan_legacy(self, queue, now: float) -> int:
+        """The seed's per-job O(idle × workers) loop, verbatim."""
+        claims = 0
+        idle = sorted(queue.idle_jobs(), key=lambda j: j.submitted_at)
+        candidates = list(self.alive_workers(now))
+        for job in idle:
+            if not candidates:
+                break
+            matched = None
+            for w in candidates:
+                if symmetric_match(job.ad, w.offer_ad(),
+                                   job.requirements, w.start_expr):
+                    matched = w
+                    break
+            if matched is None:
+                continue
+            queue.claim(job.jid, matched.name, now)
+            matched.add_claim(job)
+            matched.idle_since = -1.0
+            claims += 1
+            free = matched.free_resources()
+            exhausted = any(
+                isinstance(v, (int, float)) and v <= 0
+                for k, v in free.items()
+                if k in ("cpus", "gpus", "chips") and matched.ad.get(k)
+            )
+            if exhausted:
+                candidates.remove(matched)
+        return claims
+
+    # -- legacy per-claim claiming loop (quantity-expression fallback) -------
     def _match_cohorts(self, queue: JobQueue, cohorts: list, workers: list,
                        free: np.ndarray, now: float, *,
                        budget: int | None = None,
                        on_claim=None) -> int:
-        """The vectorized claiming loop over pre-sorted cohorts, against
-        a SHARED worker free-resource matrix (`free` mutates in place, so
-        several schedds in one negotiation cycle see capacity drain as
-        earlier ones claim).  `budget` caps new claims (fair-share hands
-        out capacity in bounded slices); `on_claim(job)` observes each
-        claim (the cycle charges usage from it)."""
+        """The pre-protocol vectorized claiming loop over pre-sorted
+        cohorts, against a SHARED worker free-resource matrix (`free`
+        mutates in place, so several schedds in one negotiation cycle
+        see capacity drain as earlier ones claim).  Kept as the exact
+        path for quantity-reading expressions: `budget` caps new claims
+        (fair-share hands out capacity in bounded slices); `on_claim(job)`
+        observes each claim (the cycle charges usage from it)."""
         claims = 0
         for key, jobs in cohorts:
             if not jobs:
@@ -280,17 +731,7 @@ class Collector:
                 break
             rep = next(iter(jobs.values()))
             want = _job_req_vec(rep)
-            pos = want > 0
-            if pos.any():
-                # +eps before floor: 7.6/0.4 is 18.999...96 in floats and
-                # must count as 19 slots (the scan oracle's arithmetic
-                # never divides, so it would claim that job)
-                fits = np.floor(
-                    (free[:, pos] / want[pos]).min(axis=1) + 1e-9)
-                fits = np.maximum(fits, 0.0)
-            else:
-                # a zero-request cohort fits anywhere (bounded by demand)
-                fits = np.full(len(workers), float(len(jobs)))
+            fits = cohort_fits(free, want, len(jobs))
             if fits.sum() <= 0:
                 continue
             pending = queue.cohort_jobs_sorted(
@@ -330,192 +771,27 @@ class Collector:
                 claims += taken
         return claims
 
+    # -- deprecated shims ----------------------------------------------------
+    def negotiate(self, queue: JobQueue, now: float) -> int:
+        """Deprecated: use `run_cycle(queue, now)`."""
+        warnings.warn(
+            "Collector.negotiate is deprecated; use Collector.run_cycle",
+            DeprecationWarning, stacklevel=2)
+        return self.run_cycle(queue, now)
+
     def negotiate_scan(self, queue: JobQueue, now: float) -> int:
-        """The seed's per-job O(idle × workers) cycle — kept verbatim as
-        the tick-engine baseline and the oracle for differential tests."""
-        claims = 0
-        idle = sorted(queue.idle_jobs(), key=lambda j: j.submitted_at)
-        candidates = list(self.alive_workers(now))
-        for job in idle:
-            if not candidates:
-                break
-            matched = None
-            for w in candidates:
-                if symmetric_match(job.ad, w.offer_ad(),
-                                   job.requirements, w.start_expr):
-                    matched = w
-                    break
-            if matched is None:
-                continue
-            queue.claim(job.jid, matched.name, now)
-            matched.add_claim(job)
-            matched.idle_since = -1.0
-            claims += 1
-            free = matched.free_resources()
-            exhausted = any(
-                isinstance(v, (int, float)) and v <= 0
-                for k, v in free.items()
-                if k in ("cpus", "gpus", "chips") and matched.ad.get(k)
-            )
-            if exhausted:
-                candidates.remove(matched)
-        return claims
-
-    # -- flocking: several schedds, one pool ---------------------------------
-    def negotiate_cycle(self, queues, now: float, *, accountant=None,
-                        quantum: int = 1) -> int:
-        """One federated matchmaking cycle over several schedds.
-
-        `queues` is the FLOCKING ORDER — with no accountant, schedds
-        drain strictly in that order (earlier submit hosts see capacity
-        first, FIFO within each queue), against ONE shared free-resource
-        matrix.  A single queue without an accountant is exactly
-        `negotiate` — the differential tests pin that equivalence.
-
-        With an `Accountant` (core/fairshare.py) the cycle water-fills
-        capacity hierarchically, the way HTCondor's negotiator serves
-        submitters: repeatedly pick the most-owed schedd (smallest
-        usage/quota), then its best-priority user (smallest effective
-        priority = factor × (base + decayed usage)), hand that user at
-        most `quantum` claims through the vectorized matcher, charge the
-        claimed cores back as virtual usage, and repeat until no
-        (schedd, user) can claim anything more.  Serving the argmin and
-        charging it equalizes factor×usage across users and usage/quota
-        across schedds — the inverse-factor, proportional-quota split
-        HTCondor documents.  `quantum` is the fairness granularity (in
-        claims) traded against matcher calls per cycle: 1 is exact
-        water-filling (a 48-slot pool under 3:1 quotas splits 36:12,
-        ±1); coarser chunks truncate the fill ladder early and distort
-        small-pool splits."""
-        queues = list(queues)
-        if len(queues) == 1 and accountant is None:
-            return self.negotiate(queues[0], now)
-        workers = self.alive_workers(now)
-        if not workers:
-            return 0
-        free = np.stack([w.free_vec() for w in workers])
-        total = 0
-
-        if accountant is None:
-            for q in queues:
-                if not hasattr(q, "idle_cohorts"):
-                    n = self.negotiate_scan(q, now)
-                    if n:     # scan bypassed the shared matrix: rebuild
-                        free = np.stack([w.free_vec() for w in workers])
-                    total += n
-                    continue
-                cohorts = [(k, j) for k, j in q.idle_cohorts() if j]
-                cohorts.sort(key=lambda kv: q.cohort_first_submit(kv[0]))
-                total += self._match_cohorts(q, cohorts, workers, free,
-                                             now)
-            return total
-
-        accountant.reset_cycle()
-        names = [getattr(q, "name", f"schedd{i:02d}")
-                 for i, q in enumerate(queues)]
-        # (schedd idx, user) -> that user's idle cohorts, FIFO-sorted
-        active: dict[tuple[int, str], list] = {}
-        for si, q in enumerate(queues):
-            by_user: dict[str, list] = {}
-            for key, jobs in q.idle_cohorts():
-                if not jobs:
-                    continue
-                rep = next(iter(jobs.values()))
-                by_user.setdefault(user_of(rep), []).append((key, jobs))
-            for user, cohorts in by_user.items():
-                cohorts.sort(key=lambda kv: q.cohort_first_submit(kv[0]))
-                active[(si, user)] = cohorts
-        if not active:
-            return 0
-
-        quantum = max(1, int(quantum))
-        while active:
-            si = min({i for i, _ in active},
-                     key=lambda i: (accountant.group_owed(names[i], now),
-                                    i))
-            user = min((u for i, u in active if i == si),
-                       key=lambda u: (
-                           accountant.effective_priority(u, now), u))
-            cores = [0.0]
-
-            def observe(job, _c=cores):
-                _c[0] += job_cores(job)
-
-            got = self._match_cohorts(
-                queues[si], active[(si, user)], workers, free, now,
-                budget=quantum, on_claim=observe)
-            if got:
-                accountant.charge_virtual(names[si], user, cores[0])
-                total += got
-            if got < quantum:
-                # demand or matching capacity exhausted for this user —
-                # neither can grow within the cycle, so retire the entry
-                del active[(si, user)]
-        # claims are real running-core rates now; outside-the-cycle
-        # priority queries (metrics, owed-share deficits) must not see
-        # stale virtual charges on top of them
-        accountant.reset_cycle()
-        return total
+        """Deprecated: use `scan_cycle(queue, now)`."""
+        warnings.warn(
+            "Collector.negotiate_scan is deprecated; use "
+            "Collector.scan_cycle", DeprecationWarning, stacklevel=2)
+        return self.scan_cycle(queue, now)
 
     def preview_matches(self, queues, now: float) -> list[dict]:
-        """Dry-run of the next negotiation cycle: how many of each
-        cohort's idle jobs CURRENT free capacity would absorb, without
-        claiming anything.  Returns one {cohort_key: absorbed} dict per
-        queue.  The provisioner computes deficits from the remaining
-        (post-negotiation) idle cohorts, so a job about to be matched to
-        existing capacity — including partial slots the old unclaimed-
-        worker count missed — is not provisioned for again.
-
-        Estimate caveat: quantity-reading START/Requirements expressions
-        are evaluated against the live offer, not the virtually-drained
-        one, so the preview can over-count absorption for such policies
-        by at most one cohort slice per worker."""
-        queues = list(queues)
-        out: list[dict] = [{} for _ in queues]
-        workers = self.alive_workers(now)
-        if not workers:
-            return out
-        entries = []
-        for qi, q in enumerate(queues):
-            if not hasattr(q, "idle_cohorts"):
-                continue          # foreign queue: no preview possible
-            for key, jobs in q.idle_cohorts():
-                if jobs:
-                    entries.append(
-                        (q.cohort_first_submit(key), qi, key, jobs))
-        if not entries:
-            return out
-        entries.sort(key=lambda e: (e[0], e[1]))
-        free = np.stack([w.free_vec() for w in workers])
-        for _first, qi, key, jobs in entries:
-            rep = next(iter(jobs.values()))
-            want = _job_req_vec(rep)
-            pos = want > 0
-            if pos.any():
-                fits = np.floor(
-                    (free[:, pos] / want[pos]).min(axis=1) + 1e-9)
-                fits = np.maximum(fits, 0.0)
-            else:
-                fits = np.full(len(workers), float(len(jobs)))
-            if fits.sum() <= 0:
-                continue
-            left = len(jobs)
-            absorbed = 0
-            for wi, w in enumerate(workers):
-                if left <= 0:
-                    break
-                k = int(fits[wi])
-                if k <= 0:
-                    continue
-                if not self.cohort_match(rep, w):
-                    continue
-                take = min(k, left)
-                free[wi] -= want * take
-                absorbed += take
-                left -= take
-            if absorbed:
-                out[qi][key] = absorbed
-        return out
+        """Deprecated: use `preview(queues, now)`."""
+        warnings.warn(
+            "Collector.preview_matches is deprecated; use "
+            "Collector.preview", DeprecationWarning, stacklevel=2)
+        return self.preview(queues, now)
 
 
 def advance_workers(

@@ -147,7 +147,7 @@ def run_elastic(cfg, *, steps, batch, seq, ckpt_dir, log_every=10):
                              runtime_s=1e9), now)
         prov.maybe_reconcile(now)
         cluster.schedule(now)
-        collector.negotiate(queue, now)
+        collector.run_cycle(queue, now)
         n_claimed = sum(1 for w in collector.workers.values() if w.claimed)
         now += 2.0
 

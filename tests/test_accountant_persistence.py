@@ -1,0 +1,106 @@
+"""Accountant / UsageLedger persistable state (ISSUE 6 satellite 2):
+plain-dict snapshots that survive a JSON round-trip and restore a
+bitwise-equivalent book in a fresh process."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.fairshare import Accountant, UsageLedger
+from repro.core.jobqueue import Job, JobQueue
+
+
+def exercised_ledger():
+    led = UsageLedger(half_life_s=3600.0)
+    led.add_rate("alice", 4.0, 0.0)
+    led.add_rate("bob", 1.0, 100.0)
+    led.charge("carol", 250.0, 500.0)
+    led.add_rate("alice", -2.0, 1800.0)
+    return led
+
+
+def test_ledger_state_json_round_trip():
+    led = exercised_ledger()
+    state = json.loads(json.dumps(led.state_dict()))
+    led2 = UsageLedger(half_life_s=1.0)     # wrong config on purpose
+    led2.load_state(state)
+    assert led2.half_life_s == led.half_life_s
+    for t in (1800.0, 7200.0, 1e6):
+        for key in led.keys():
+            assert led2.usage(key, t) == led.usage(key, t), (key, t)
+            assert led2.rate(key) == led.rate(key)
+    assert led2.keys() == led.keys()
+
+
+def test_ledger_load_state_validates_half_life():
+    with pytest.raises(ValueError):
+        UsageLedger().load_state({"half_life_s": 0.0})
+
+
+def exercised_accountant():
+    acct = Accountant(half_life_s=7200.0, base_priority=0.25,
+                      default_factor=2.0)
+    acct.set_quota("osg", 3.0)
+    acct.set_quota("cms", 1.0)
+    acct.set_priority_factor("heavy", 10.0)
+    q = JobQueue(name="osg")
+    acct.attach_queue("osg", q)
+    jid = q.submit(Job(ad={"request_cpus": 4, "user": "alice"},
+                       runtime_s=600), 0.0)
+    q.claim(jid, "w0", 10.0)
+    q.submit(Job(ad={"request_cpus": 1, "user": "heavy"},
+                 runtime_s=600), 0.0)
+    acct.users.charge("heavy", 5000.0, 50.0)
+    acct.groups.charge("cms", 800.0, 50.0)
+    return acct
+
+
+def test_accountant_state_json_round_trip():
+    acct = exercised_accountant()
+    state = json.loads(json.dumps(acct.state_dict()))
+    fresh = Accountant()
+    fresh.restore(state)
+    for t in (100.0, 5000.0, 1e5):
+        for u in acct.users.keys():
+            assert (fresh.effective_priority(u, t)
+                    == acct.effective_priority(u, t)), (u, t)
+        for s in acct.groups.keys():
+            assert fresh.group_owed(s, t) == acct.group_owed(s, t), (s, t)
+    assert fresh.base_priority == acct.base_priority
+    assert fresh.default_factor == acct.default_factor
+    assert fresh.quotas == acct.quotas
+    assert fresh.factors == acct.factors
+
+
+def test_restore_accepts_full_snapshot():
+    """`snapshot(now)` carries the persistable state under its "state"
+    key, so a metrics record doubles as a restore point."""
+    acct = exercised_accountant()
+    snap = json.loads(json.dumps(acct.snapshot(123.0)))
+    fresh = Accountant()
+    fresh.restore(snap)
+    assert fresh.snapshot(456.0) == acct.snapshot(456.0)
+
+
+def test_restore_drops_virtual_charges():
+    """Within-cycle virtual charges are cycle-local and must not leak
+    through persistence."""
+    acct = exercised_accountant()
+    acct.charge_virtual("osg", "alice", 64.0)
+    before = acct.effective_priority("alice", 100.0)
+    fresh = Accountant()
+    fresh.restore(acct.state_dict())
+    assert fresh.effective_priority("alice", 100.0) < before
+
+
+def test_snapshot_gauges_unchanged_by_state_key():
+    """The pre-existing gauge fields keep their schema; "state" rides
+    alongside."""
+    acct = exercised_accountant()
+    snap = acct.snapshot(100.0)
+    assert set(snap) == {"users", "schedds", "state"}
+    assert "effective_priority" in snap["users"]["alice"]
+    assert "quota" in snap["schedds"]["osg"]

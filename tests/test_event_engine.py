@@ -112,13 +112,13 @@ def test_negotiation_cadence_exact_when_interval_not_tick_multiple():
     with tick_s=7 / interval=15; the event loop pins last + interval."""
     sim = mk_sim(tick_s=7, negotiate_interval_s=15)
     times = []
-    orig = sim.collector.negotiate
+    orig = sim.collector.run_cycle
 
     def spy(queue, now):
         times.append(now)
         return orig(queue, now)
 
-    sim.collector.negotiate = spy
+    sim.collector.run_cycle = spy
     sim.run(100)
     assert times == [0, 15, 30, 45, 60, 75, 90]
 
@@ -126,13 +126,13 @@ def test_negotiation_cadence_exact_when_interval_not_tick_multiple():
 def test_tick_engine_still_drifts_documenting_the_seed_bug():
     sim = mk_sim(tick_s=7, negotiate_interval_s=15, engine="tick")
     times = []
-    orig = sim.collector.negotiate_scan
+    orig = sim.collector.scan_cycle
 
     def spy(queue, now):
         times.append(now)
         return orig(queue, now)
 
-    sim.collector.negotiate_scan = spy
+    sim.collector.scan_cycle = spy
     sim.run(100)
     assert times == [0, 21, 42, 63, 84]   # quantized to tick multiples
 
@@ -213,8 +213,8 @@ def test_vectorized_matches_scan_when_capacity_plentiful():
     _jobs(qa, shapes)
     _jobs(qb, shapes)
     ca, cb = _pool(10), _pool(10)
-    na = ca.negotiate(qa, 0.0)
-    nb = cb.negotiate_scan(qb, 0.0)
+    na = ca.run_cycle(qa, 0.0)
+    nb = cb.scan_cycle(qb, 0.0)
     assert na == nb == len(shapes)
     assert qa.n_idle() == qb.n_idle() == 0
     # identical per-worker load profile (sorted claim counts)
@@ -229,8 +229,8 @@ def test_vectorized_matches_scan_under_contention_single_cohort():
     _jobs(qa, shapes)
     _jobs(qb, shapes)
     ca, cb = _pool(3, gpus=4), _pool(3, gpus=4)   # 12 slots
-    na = ca.negotiate(qa, 0.0)
-    nb = cb.negotiate_scan(qb, 0.0)
+    na = ca.run_cycle(qa, 0.0)
+    nb = cb.scan_cycle(qb, 0.0)
     assert na == nb == 12
     # FIFO: the 12 earliest-submitted jobs were the ones claimed
     claimed_a = sorted(j.jid for w in ca.workers.values()
@@ -257,8 +257,8 @@ def test_quantity_referencing_start_expr_reevaluated_per_claim():
 
     qa, ca, wa = pool()
     qb, cb, wb = pool()
-    assert ca.negotiate(qa, 0.0) == 3
-    assert cb.negotiate_scan(qb, 0.0) == 3
+    assert ca.run_cycle(qa, 0.0) == 3
+    assert cb.scan_cycle(qb, 0.0) == 3
     assert len(wa.claimed) == len(wb.claimed) == 3
 
 
@@ -294,7 +294,7 @@ def test_start_expr_respected_by_vectorized_negotiator():
                startup_delay=0.0)
     w.booted_at = 0.0
     col.advertise(w)
-    assert col.negotiate(q, 0.0) == 1
+    assert col.run_cycle(q, 0.0) == 1
     (job,) = w.claimed.values()
     assert job.ad["priority_user"] is True
 
@@ -413,7 +413,7 @@ def test_vectorized_negotiate_falls_back_on_foreign_queue():
                start_expr=ClassAdExpr(None), startup_delay=0.0)
     w.booted_at = 0.0
     col.advertise(w)
-    assert col.negotiate(q, 0.0) == 1
+    assert col.run_cycle(q, 0.0) == 1
     assert q.claimed == [0]
 
 

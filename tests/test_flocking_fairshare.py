@@ -242,7 +242,7 @@ def test_negotiate_cycle_single_queue_delegates():
 
     qa, ca = setup()
     qb, cb = setup()
-    na = ca.negotiate(qa, 0.0)
+    na = ca.run_cycle(qa, 0.0)
     nb = cb.negotiate_cycle([qb], 0.0)
     assert na == nb == 6
     assert [(j.jid, j.claimed_by) for j in qa.jobs()] == \
@@ -306,7 +306,7 @@ def test_deficit_ignores_jobs_absorbed_by_partial_capacity():
     assert stats.submitted == 0, \
         "provisioned for jobs the negotiator is about to match"
     # and the negotiator indeed absorbs all five
-    assert col.negotiate(q, 10.0) == 5
+    assert col.run_cycle(q, 10.0) == 5
     assert q.n_idle() == 0
 
 
@@ -323,7 +323,7 @@ def test_deficit_still_counts_unmatchable_overflow():
 
 def test_preview_matches_counts_partial_capacity():
     q, col, prov, w = _pool_with_partial_worker()
-    preview = col.preview_matches([q], 10.0)
+    preview = col.preview([q], 10.0)
     assert sum(preview[0].values()) == 5
 
 
