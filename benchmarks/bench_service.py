@@ -1,0 +1,106 @@
+"""Pool-service overhead: streaming submission throughput and
+submit-to-first-match latency at 1k and 10k jobs.
+
+The service layer puts a quiescent-injection step (`driver.call`) and a
+serializable pending-op ledger between the client and the raw
+`Simulation` — this bench guards that the streaming surface stays
+cheap as traces grow:
+
+  * submit_jobs_per_sec  — wall rate of a one-shot immediate
+    `PoolClient.submit` for the whole trace
+  * stream_jobs_per_sec  — `at_trace_times=True`: one ledger op
+    scheduled per record
+  * first_match_s        — simulated seconds from the first arrival to
+    the first running job (matchmaking pipeline latency)
+  * drain wall time / jobs-per-sec at each scale
+
+Usage:
+    python benchmarks/bench_service.py [--jobs 1000 10000]
+        [--budget-s SECONDS]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import Timer, emit
+from repro.service import PoolClient, PoolService
+from repro.workload.compare import FEDERATION_INI
+from repro.workload.generators import diurnal_day
+
+INI = FEDERATION_INI.format(routing="cheapest-first", onprem_nodes=4,
+                            cloud_max_nodes=24, spot_max_nodes=24)
+
+
+def mk_service() -> PoolService:
+    return PoolService(INI, tick_s=30.0, negotiate_interval_s=60.0,
+                       metrics_interval_s=300.0, seed=0, speed=None)
+
+
+def one_scale(n_jobs: int, *, seed: int = 7) -> dict:
+    trace = diurnal_day(n_jobs, seed=seed, duration_s=86400.0)
+    recs = [r.to_obj() for r in trace.records]
+
+    # immediate-mode throughput (everything enters the queue at t=now);
+    # a throwaway service so the real run below starts clean
+    probe = PoolClient(mk_service())
+    with Timer() as t_imm:
+        probe.submit(recs)
+
+    svc = mk_service()
+    client = PoolClient(svc)
+    with Timer() as t_stream:
+        r = client.submit(recs, at_trace_times=True, at=0.0)
+    assert r["scheduled"] == n_jobs, (r, n_jobs)
+
+    # submit -> first match, in simulated time (tick_s resolution)
+    first_arrival = trace.records[0].arrival_s
+    while svc.sim.pool_queue.n_running() == 0:
+        svc.sim.run(svc.sim.now + 30.0)
+    first_match_s = svc.sim.now - first_arrival
+
+    with Timer() as t_drain:
+        svc.run_until_drained()
+    n_done = svc.completed_stats().n
+    assert n_done == n_jobs, (n_done, n_jobs)
+    return {
+        "jobs": n_jobs,
+        "submit_jobs_per_sec": round(n_jobs / max(t_imm.s, 1e-9), 1),
+        "stream_jobs_per_sec": round(n_jobs / max(t_stream.s, 1e-9), 1),
+        "first_match_s": round(first_match_s, 1),
+        "drain_wall_s": round(t_drain.s, 3),
+        "drain_jobs_per_sec": round(n_jobs / max(t_drain.s, 1e-9), 1),
+        "final_t": svc.sim.now,
+    }
+
+
+def run(*, jobs=(1000, 10000), echo: bool = True) -> dict:
+    with Timer() as total:
+        cells = {f"jobs_{n}": one_scale(n) for n in jobs}
+    payload = {**cells, "total_wall_s": round(total.s, 1)}
+    emit("service", payload, echo=echo)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--jobs", type=int, nargs="+", default=[1000, 10000])
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail (exit 2) if the whole bench exceeds this "
+                         "wall time")
+    args = ap.parse_args(argv)
+    try:
+        payload = run(jobs=tuple(args.jobs))
+    except AssertionError as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    if (args.budget_s is not None
+            and payload["total_wall_s"] > args.budget_s):
+        print(f"FAIL: wall {payload['total_wall_s']:.1f}s exceeds "
+              f"budget {args.budget_s:.1f}s", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,8 +15,9 @@ def main():
     from benchmarks import (
         bench_event_engine, bench_federation, bench_flocking,
         bench_grouping, bench_kernels, bench_matchmaking,
-        bench_preemption, bench_scaledown, bench_stragglers,
-        bench_trace_replay, bench_tracking, bench_utilization,
+        bench_preemption, bench_scaledown, bench_service,
+        bench_stragglers, bench_trace_replay, bench_tracking,
+        bench_utilization,
     )
 
     t0 = time.time()
@@ -24,7 +25,8 @@ def main():
     for mod in (bench_tracking, bench_grouping, bench_preemption,
                 bench_scaledown, bench_stragglers, bench_utilization,
                 bench_federation, bench_event_engine, bench_trace_replay,
-                bench_flocking, bench_matchmaking, bench_kernels):
+                bench_flocking, bench_matchmaking, bench_service,
+                bench_kernels):
         name = mod.__name__.split(".")[-1]
         t = time.time()
         try:

@@ -129,6 +129,11 @@ class KubeBackend:
         self.weight = weight
         self.stats = BackendStats()
         self._cost_t = 0.0            # cost accrued up to this sim time
+        # a draining backend reports unhealthy (every routing policy
+        # filters on healthy()), so no NEW pods route here; existing
+        # claims run to completion, then the simulation detaches it
+        # (Simulation.drain_backend)
+        self.draining = False
 
     # -- ScalingBackend surface ---------------------------------------------
     def pending(self, label: str | None = None) -> int:
@@ -191,6 +196,17 @@ class KubeBackend:
             self.stats.cost_total += self.cost_rate() * (now - self._cost_t)
             self._cost_t = now
 
+    def rebase(self, now: float) -> None:
+        """Align a backend constructed at t=0 with a pool already at
+        `now` (runtime `Simulation.add_backend`): cost accrual and node
+        alive-time integrals start at attach, not at the epoch — a
+        static cluster added at t=5000 must not bill 5000s of history."""
+        self._cost_t = now
+        for n in self.cluster.nodes.values():
+            n.created_at = now
+        for name in list(self.cluster._acct_t):
+            self.cluster._acct_t[name] = now
+
     def cost_rate(self) -> float:
         """Current burn in $/s: billed nodes plus per-pod surcharges."""
         if self.autoscaler is not None:
@@ -220,6 +236,8 @@ class KubeBackend:
         return max(0, min(fits, self.max_pods - self.live_pods()))
 
     def healthy(self) -> bool:
+        if self.draining:
+            return False                      # stop routing; drain out
         if self.autoscaler is not None:
             return True                       # can always (try to) grow
         return bool(self.cluster.nodes)
@@ -228,6 +246,7 @@ class KubeBackend:
         """Readiness view (what a /healthz of the provider would say)."""
         return {
             "healthy": self.healthy(),
+            "draining": self.draining,
             "live_nodes": len(self.cluster.nodes),
             "booting_nodes": (len(self.autoscaler._booting)
                               if self.autoscaler else 0),
@@ -249,6 +268,35 @@ class KubeBackend:
             else:
                 cost += self.node_hourly_cost
         return cost
+
+    # -- persistence ----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot of the MUTABLE half: cluster, autoscaler,
+        stats, cost accrual point, drain flag.  Configuration (costs,
+        affinity, limits) is not serialized — restore targets a backend
+        built from the same config."""
+        out = {
+            "name": self.name,
+            "draining": self.draining,
+            "cost_t": self._cost_t,
+            "stats": dataclasses.asdict(self.stats),
+            "cluster": self.cluster.state_dict(),
+        }
+        if self.autoscaler is not None:
+            out["autoscaler"] = self.autoscaler.state_dict()
+        return out
+
+    def load_state(self, state: dict) -> None:
+        if state.get("name") != self.name:
+            raise ValueError(
+                f"backend snapshot is for {state.get('name')!r}, "
+                f"not {self.name!r}")
+        self.draining = bool(state.get("draining", False))
+        self._cost_t = float(state.get("cost_t", 0.0))
+        self.stats = BackendStats(**state.get("stats", {}))
+        self.cluster.load_state(state["cluster"])
+        if self.autoscaler is not None and "autoscaler" in state:
+            self.autoscaler.load_state(state["autoscaler"])
 
     # -- spot dynamics -------------------------------------------------------
     def reclaim(self, frac: float, now: float, rng=None) -> int:

@@ -92,6 +92,71 @@ class Pod:
         return PRIORITY.get(self.priority_class, 50)
 
 
+# -- node / pod (de)serialization --------------------------------------------
+def node_state(n: Node) -> dict:
+    return {
+        "name": n.name,
+        "capacity": dict(n.capacity),
+        "labels": dict(n.labels),
+        "taints": list(n.taints),
+        "created_at": n.created_at,
+        "busy_integral": dict(n.busy_integral),
+        "alive_s": n.alive_s,
+    }
+
+
+def node_from_state(s: dict) -> Node:
+    return Node(
+        name=s["name"],
+        capacity=dict(s["capacity"]),
+        labels=dict(s.get("labels", {})),
+        taints=tuple(s.get("taints", ())),
+        created_at=float(s.get("created_at", 0.0)),
+        busy_integral=dict(s.get("busy_integral", {})),
+        alive_s=float(s.get("alive_s", 0.0)),
+    )
+
+
+def pod_state(p: Pod) -> dict:
+    """JSON-safe snapshot.  `on_start`/`on_stop` closures are NOT
+    serialized — the provisioner re-wires its own pods on restore
+    (`Provisioner.rewire_pods`); foreign pods come back callback-less."""
+    return {
+        "name": p.name,
+        "request": dict(p.request),
+        "priority_class": p.priority_class,
+        "tolerations": list(p.tolerations),
+        "node_selector": {k: (list(v) if isinstance(v, (list, tuple, set))
+                              else v)
+                          for k, v in p.node_selector.items()},
+        "labels": dict(p.labels),
+        "phase": p.phase.value,
+        "node": p.node,
+        "created_at": p.created_at,
+        "started_at": p.started_at,
+        "stopped_at": p.stopped_at,
+        "stop_reason": p.stop_reason,
+    }
+
+
+def pod_from_state(s: dict) -> Pod:
+    return Pod(
+        name=s["name"],
+        request=dict(s["request"]),
+        priority_class=s.get("priority_class", "default"),
+        tolerations=tuple(s.get("tolerations", ())),
+        node_selector={k: (tuple(v) if isinstance(v, list) else v)
+                       for k, v in s.get("node_selector", {}).items()},
+        labels=dict(s.get("labels", {})),
+        phase=PodPhase(s["phase"]),
+        node=s.get("node"),
+        created_at=float(s.get("created_at", 0.0)),
+        started_at=float(s.get("started_at", -1.0)),
+        stopped_at=float(s.get("stopped_at", -1.0)),
+        stop_reason=s.get("stop_reason", ""),
+    )
+
+
 class KubeCluster:
     def __init__(self, nodes: list[Node] | None = None, *,
                  enable_preemption: bool = True, name: str = "default"):
@@ -333,6 +398,54 @@ class KubeCluster:
                     self.events.append((now, "preempt", v.name))
                 return self._try_place(pod, now)
         return False
+
+    # -- persistence ----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot.  Index ORDERS are serialized explicitly:
+        best-fit placement iterates `nodes` in insertion order, the
+        pending sort breaks (priority, created_at) ties on `_pending`
+        insertion order, and preemption victim ties follow `_node_pods`
+        order — recomputing any of them could diverge a restored run.
+        The `events` debug log is NOT serialized (unbounded, and nothing
+        in the control flow reads it)."""
+        nid = next(self._ids)
+        self._ids = itertools.count(nid)   # non-destructive peek
+        return {
+            "name": self.name,
+            "now": self.now,
+            "dirty": self._dirty,
+            "next_id": nid,
+            "nodes": [node_state(n) for n in self.nodes.values()],
+            "acct_t": dict(self._acct_t),
+            "used": {k: dict(v) for k, v in self._used.items()},
+            "pods": [pod_state(p) for p in self.pods.values()],
+            "pending": list(self._pending.keys()),
+            "running": list(self._running.keys()),
+            "node_pods": {n: list(d.keys())
+                          for n, d in self._node_pods.items()},
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.now = float(state.get("now", 0.0))
+        self._dirty = bool(state.get("dirty", True))
+        self._ids = itertools.count(int(state.get("next_id", 0)))
+        self.nodes = {}
+        for ns in state.get("nodes", []):
+            n = node_from_state(ns)
+            self.nodes[n.name] = n
+        self._acct_t = {k: float(v)
+                        for k, v in state.get("acct_t", {}).items()}
+        self._used = {k: dict(v) for k, v in state.get("used", {}).items()}
+        self.pods = {}
+        for ps in state.get("pods", []):
+            p = pod_from_state(ps)
+            self.pods[p.name] = p
+        self._pending = {n: self.pods[n] for n in state.get("pending", [])}
+        self._running = {n: self.pods[n] for n in state.get("running", [])}
+        self._node_pods = {
+            node: {n: self.pods[n] for n in names}
+            for node, names in state.get("node_pods", {}).items()
+        }
 
     # -- accounting -----------------------------------------------------------
     def tick_accounting(self, dt: float, now: float | None = None):

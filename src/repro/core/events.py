@@ -115,6 +115,15 @@ class EventLoop:
         return PeriodicHandle(self, interval, fn, first=first, name=name,
                               priority=priority)
 
+    def cancel(self, handle: "EventHandle | PeriodicHandle") -> None:
+        """Cancel a scheduled one-shot or periodic callback by its
+        handle.  The heap entry is dropped lazily (`_skim`), so
+        cancellation is O(1); a cancelled periodic never re-arms.  This
+        is how a drained backend's poll timers are retired — the
+        simulation retains every periodic handle it installs exactly so
+        they can be cancelled here (simulation.py `_backend_timers`)."""
+        handle.cancel()
+
     # -- draining ------------------------------------------------------------
     def _skim(self):
         """Drop cancelled events from the top of the heap."""

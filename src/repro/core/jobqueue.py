@@ -96,6 +96,57 @@ def cohort_key_of(job: Job) -> tuple:
     return (req, canonical_ad(job.ad))
 
 
+# -- job (de)serialization ----------------------------------------------------
+def job_state(job: Job) -> dict:
+    """JSON-safe snapshot of a Job.  Requirements serialize as their
+    source text (recompiled on load — ClassAdExpr compilation is pure);
+    `work_fn` jobs cannot snapshot: an arbitrary Python closure has no
+    faithful serial form, and resuming it mid-flight would silently
+    change semantics."""
+    if job.work_fn is not None:
+        raise ValueError(
+            f"job {job.jid} has a work_fn; live-callable jobs cannot be "
+            "snapshotted")
+    return {
+        "jid": job.jid,
+        "ad": dict(job.ad),
+        "runtime_s": job.runtime_s,
+        "requirements": (job.requirements.src
+                         if job.requirements is not None else None),
+        "state": job.state.value,
+        "submitted_at": job.submitted_at,
+        "started_at": job.started_at,
+        "attempt_started_at": job.attempt_started_at,
+        "completed_at": job.completed_at,
+        "remaining_s": job.remaining_s,
+        "preempt_count": job.preempt_count,
+        "wasted_s": job.wasted_s,
+        "claimed_by": job.claimed_by,
+    }
+
+
+def job_from_state(state: dict, *, schedd: "JobQueue | None" = None) -> Job:
+    req_src = state.get("requirements")
+    job = Job(
+        ad=dict(state["ad"]),
+        runtime_s=float(state["runtime_s"]),
+        requirements=ClassAdExpr(req_src) if req_src else None,
+        jid=int(state["jid"]),
+        state=JobState(state["state"]),
+        submitted_at=float(state["submitted_at"]),
+        started_at=float(state.get("started_at", -1.0)),
+        attempt_started_at=float(state.get("attempt_started_at", -1.0)),
+        completed_at=float(state.get("completed_at", -1.0)),
+        remaining_s=float(state["remaining_s"]),
+        preempt_count=int(state.get("preempt_count", 0)),
+        wasted_s=float(state.get("wasted_s", 0.0)),
+        claimed_by=state.get("claimed_by"),
+        schedd=schedd,
+    )
+    job.cohort_key = cohort_key_of(job)
+    return job
+
+
 class JobQueue:
     """Single schedd. The provisioner and the workers both query it — the
     workers through the collector's matchmaking (worker.py).
@@ -140,6 +191,10 @@ class JobQueue:
         self._cohort_min: dict[tuple, tuple] = {}
         self._cohort_tail: dict[tuple, tuple] = {}
         self._cohort_unsorted: set[tuple] = set()
+        # a draining schedd stops ACCEPTING submissions (the pool
+        # service refuses them) but keeps negotiating until empty, then
+        # detaches — the schedd-side mirror of backend draining
+        self.draining = False
 
     # -- index maintenance ---------------------------------------------------
     def _enter_state(self, job: Job, state: JobState):
@@ -306,6 +361,99 @@ class JobQueue:
         job.claimed_by = None
         for hook in self._release_hooks:
             hook(job, now)
+
+    def remove(self, jid: int, now: float) -> Job | None:
+        """`condor_rm`: take a job out of the queue entirely.  Running
+        jobs are released first so the release hooks fire (the fair-share
+        accountant's core rates stay exact); the CALLER must also drop
+        the worker-side claim (`job.claimed_by` names it).  Returns the
+        removed Job, or None if the jid is unknown."""
+        job = self._jobs.get(jid)
+        if job is None:
+            return None
+        if job.state == JobState.RUNNING:
+            self._drop_running_user(job)
+            for hook in self._release_hooks:
+                hook(job, now)
+        self._leave_state(job)
+        self._jobs.pop(jid, None)
+        job.state = JobState.REMOVED
+        job.claimed_by = None
+        return job
+
+    # -- persistence ----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot.  Iteration ORDERS are part of the state:
+        negotiation sorts are stable, best-fit ties break on insertion
+        order, and `_cohort_min` is a possibly-stale lower bound that
+        cross-cohort FIFO ordering depends on — so the snapshot carries
+        jobs in `_jobs` order, per-state jid lists, the idle-cohort
+        member lists in cohort order, and the raw min/tail/unsorted
+        bookkeeping rather than anything recomputed.  Hooks and the
+        (possibly shared) jid counter are NOT serialized — the restoring
+        Simulation re-attaches hooks at construction and re-seeds the
+        shared counter itself."""
+        idle_order = []
+        cohort_meta = []
+        for key, cohort in self._idle_cohorts.items():
+            idle_order.append(list(cohort.keys()))
+            m = self._cohort_min.get(key)
+            t = self._cohort_tail.get(key)
+            cohort_meta.append({
+                "min": list(m) if m is not None else None,
+                "tail": list(t) if t is not None else None,
+                "unsorted": key in self._cohort_unsorted,
+            })
+        return {
+            "name": self.name,
+            "draining": self.draining,
+            "keep_completed": self.keep_completed,
+            "idle_version": self.idle_version,
+            "jobs": [job_state(j) for j in self._jobs.values()],
+            "by_state": {
+                s.value: list(self._by_state[s].keys())
+                for s in JobState if self._by_state[s]
+            },
+            "idle_order": idle_order,
+            "cohort_meta": cohort_meta,
+            "completed": [job_state(j) for j in self.completed_log],
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore from `state_dict()` output, rebuilding every index in
+        the serialized order (NOT via submit(): that would re-fire hooks
+        and reassign jids).  Leaves hooks and `_ids` untouched."""
+        self.draining = bool(state.get("draining", False))
+        self.keep_completed = bool(state.get("keep_completed", True))
+        jobs = [job_from_state(s, schedd=self) for s in state.get("jobs", [])]
+        self._jobs = {j.jid: j for j in jobs}
+        self._by_state = {s: {} for s in JobState}
+        for sval, jids in state.get("by_state", {}).items():
+            bucket = self._by_state[JobState(sval)]
+            for jid in jids:
+                bucket[jid] = self._jobs[jid]
+        self._idle_cohorts = {}
+        self._cohort_min = {}
+        self._cohort_tail = {}
+        self._cohort_unsorted = set()
+        for jids, meta in zip(state.get("idle_order", []),
+                              state.get("cohort_meta", [])):
+            members = {jid: self._jobs[jid] for jid in jids}
+            key = next(iter(members.values())).cohort_key
+            self._idle_cohorts[key] = members
+            if meta.get("min") is not None:
+                self._cohort_min[key] = tuple(meta["min"])
+            if meta.get("tail") is not None:
+                self._cohort_tail[key] = tuple(meta["tail"])
+            if meta.get("unsorted"):
+                self._cohort_unsorted.add(key)
+        self.idle_version = int(state.get("idle_version", 0))
+        self.completed_log = [job_from_state(s, schedd=self)
+                              for s in state.get("completed", [])]
+        self.running_by_user = {}
+        for j in self._by_state[JobState.RUNNING].values():
+            u = user_of(j)
+            self.running_by_user[u] = self.running_by_user.get(u, 0) + 1
 
     # -- stats ----------------------------------------------------------------
     def n_idle(self) -> int:

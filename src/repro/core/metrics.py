@@ -232,6 +232,29 @@ class CompletedStats:
                                      other.last_completed_at)
         return self
 
+    # -- persistence (pool-service snapshot/resume) --------------------------
+    def state_dict(self) -> dict:
+        return {
+            "n": self.n,
+            "runtime_s": self.runtime_s,
+            "core_seconds": self.core_seconds,
+            "gpu_seconds": self.gpu_seconds,
+            "wasted_s": self.wasted_s,
+            "preemptions": self.preemptions,
+            "waits": list(self.waits),
+            "last_completed_at": self.last_completed_at,
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.n = int(state.get("n", 0))
+        self.runtime_s = float(state.get("runtime_s", 0.0))
+        self.core_seconds = float(state.get("core_seconds", 0.0))
+        self.gpu_seconds = float(state.get("gpu_seconds", 0.0))
+        self.wasted_s = float(state.get("wasted_s", 0.0))
+        self.preemptions = int(state.get("preemptions", 0))
+        self.waits = [float(w) for w in state.get("waits", [])]
+        self.last_completed_at = float(state.get("last_completed_at", 0.0))
+
     def summary(self) -> dict[str, Any]:
         out: dict[str, Any] = {
             "n": self.n,

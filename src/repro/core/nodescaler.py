@@ -166,6 +166,37 @@ class NodeAutoscaler:
                       if n.startswith(self.prefix)])
         self.node_seconds += n_live * dt
 
+    # -- persistence ----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot.  `node_seconds`/`empty_node_seconds`
+        integrate at tick granularity and are NOT flushed between ticks,
+        so carrying the counters as of the last tick matches an
+        uninterrupted run exactly."""
+        from repro.core.cluster import node_state
+        nid = next(self._ids)
+        self._ids = itertools.count(nid)   # non-destructive peek
+        return {
+            "next_id": nid,
+            "booting": [[t, node_state(n)] for t, n in self._booting],
+            "empty_since": dict(self._empty_since),
+            "node_seconds": self.node_seconds,
+            "empty_node_seconds": self.empty_node_seconds,
+            "provisioned_total": self.provisioned_total,
+            "deprovisioned_total": self.deprovisioned_total,
+        }
+
+    def load_state(self, state: dict) -> None:
+        from repro.core.cluster import node_from_state
+        self._ids = itertools.count(int(state.get("next_id", 0)))
+        self._booting = [(float(t), node_from_state(ns))
+                         for t, ns in state.get("booting", [])]
+        self._empty_since = {k: float(v)
+                             for k, v in state.get("empty_since", {}).items()}
+        self.node_seconds = float(state.get("node_seconds", 0.0))
+        self.empty_node_seconds = float(state.get("empty_node_seconds", 0.0))
+        self.provisioned_total = int(state.get("provisioned_total", 0))
+        self.deprovisioned_total = int(state.get("deprovisioned_total", 0))
+
     # -- metrics (Fig 3 analogue) -------------------------------------------------
     def waste_fraction(self) -> float:
         """Empty-node-seconds / total node-seconds."""

@@ -117,6 +117,17 @@ class Provisioner:
         # signature are pure functions of a cohort's (identical) ads
         self._cohort_filter: dict[tuple, bool] = {}
         self._cohort_sig: dict[tuple, GroupSignature] = {}
+        # single-entry memo over the negotiation dry run: an IDLE pool
+        # reconciles every interval against unchanged demand and
+        # capacity, and the preview is the expensive half of the pass.
+        # Keyed on (per-queue idle fingerprint, ready-worker free-matrix
+        # digest): any claim/release/boot/death changes a worker's free
+        # vector, any submit/remove changes an idle count, and a
+        # cohort-set change bumps idle_version — so a hit implies an
+        # identical dry run.
+        self._preview_cache: tuple[tuple, list[dict]] | None = None
+        self.preview_hits = 0
+        self.preview_misses = 0
 
     @property
     def cluster(self) -> KubeCluster:
@@ -170,6 +181,25 @@ class Provisioner:
             self._cohort_sig[key] = sig
         return sig
 
+    def _preview_cached(self, now: float) -> list[dict]:
+        """Memoized `Collector.preview` dry run (see __init__)."""
+        workers = []
+        for w in self.collector.workers.values():
+            if w.ready(now) and not w.draining:
+                workers.append((w.name, w.free_vec().tobytes()))
+        key = (
+            tuple((q.idle_version, q.n_idle()) for q in self.queues),
+            tuple(workers),
+        )
+        cached = self._preview_cache
+        if cached is not None and cached[0] == key:
+            self.preview_hits += 1
+            return cached[1]
+        self.preview_misses += 1
+        previews = self.collector.preview(self.queues, now)
+        self._preview_cache = (key, previews)
+        return previews
+
     def _idle_group_counts(self, now: float) -> tuple[
             dict[GroupSignature, int], dict[GroupSignature, dict], bool]:
         """Filtered POST-NEGOTIATION idle demand per requirement
@@ -197,7 +227,7 @@ class Provisioner:
                     per = by_schedd.setdefault(sig, {})
                     per[name] = per.get(name, 0) + len(jobs)
             return counts, by_schedd, True
-        previews = self.collector.preview(self.queues, now)
+        previews = self._preview_cached(now)
         for qi, q in enumerate(self.queues):
             absorbed = previews[qi]
             name = self._schedd_name(qi)
@@ -238,10 +268,14 @@ class Provisioner:
                 stats.per_schedd_deficit[name] = (
                     stats.per_schedd_deficit.get(name, 0) + k)
 
+        # ties on owed weight break on the stable group label, NOT dict
+        # insertion order — a restored run rebuilds `groups` from
+        # serialized cohort order and must submit pods identically
         for sig, n_idle in sorted(
             groups.items(),
-            key=lambda kv: -self._owed_weight(kv[1],
-                                              by_schedd.get(kv[0], {}))
+            key=lambda kv: (-self._owed_weight(kv[1],
+                                               by_schedd.get(kv[0], {})),
+                            self._pod_group_label(kv[0]))
         ):
             label = self._pod_group_label(sig)
             pending = self._group_pending(label)
@@ -312,6 +346,84 @@ class Provisioner:
                           name="reconcile", priority=priority)
 
     # -- pod/worker wiring --------------------------------------------------------
+    def _pod_callbacks(self, worker: Worker):
+        """(on_start, on_stop) closures for one provisioner pod/worker
+        pair — factored out so `rewire_pods` can rebuild them on a
+        restored pod (closures don't serialize)."""
+        def on_start(pod: Pod, t: float, *, _w=worker):
+            _w.booted_at = t + _w.startup_delay
+            self.collector.advertise(_w)
+
+        def on_stop(pod: Pod, t: float, reason: str, *, _w=worker):
+            if reason != "completed":
+                from repro.core.worker import kill_worker
+                kill_worker(self.collector, self.queue, _w.name, t)
+
+        return on_start, on_stop
+
+    def rewire_pods(self, workers_by_name: dict[str, Worker]) -> int:
+        """Re-attach lifecycle closures to restored provisioner pods:
+        each live pod labelled ours is matched to its Worker by name
+        (pod name == worker name == worker.pod_name, by construction in
+        `_submit_pod`).  Foreign pods are left callback-less.  Returns
+        pods rewired."""
+        n = 0
+        for b in self.backends:
+            cluster = b.cluster
+            for pod in itertools.chain(cluster._pending.values(),
+                                       cluster._running.values()):
+                if pod.labels.get("owner") != "prp-provisioner":
+                    continue
+                w = workers_by_name.get(pod.name)
+                if w is None:
+                    raise ValueError(
+                        f"restored pod {pod.name!r} has no worker")
+                pod.on_start, pod.on_stop = self._pod_callbacks(w)
+                n += 1
+        return n
+
+    # -- persistence ----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot: the pod-name counter (pod/worker names
+        MUST keep incrementing where they left off — they key claims and
+        collector entries), the reconcile clock, and cumulative stats.
+        The cohort/preview memos are pure caches and simply refill."""
+        nid = next(self._ids)
+        self._ids = itertools.count(nid)   # non-destructive peek
+        return {
+            "next_id": nid,
+            "last_run": self._last_run,
+            "stats": {
+                "submitted": self.stats.submitted,
+                "reaped_pending": self.stats.reaped_pending,
+                "per_group_submitted": [
+                    [list(dataclasses.astuple(sig)), k]
+                    for sig, k in self.stats.per_group_submitted.items()
+                ],
+                "per_backend_submitted":
+                    dict(self.stats.per_backend_submitted),
+                "per_schedd_deficit": dict(self.stats.per_schedd_deficit),
+            },
+        }
+
+    def load_state(self, state: dict) -> None:
+        self._ids = itertools.count(int(state.get("next_id", 0)))
+        self._last_run = float(state.get("last_run", -1e18))
+        s = state.get("stats", {})
+        self.stats = ProvisionStats(
+            submitted=int(s.get("submitted", 0)),
+            reaped_pending=int(s.get("reaped_pending", 0)),
+            per_group_submitted={
+                GroupSignature(*vals): int(k)
+                for vals, k in s.get("per_group_submitted", [])
+            },
+            per_backend_submitted=dict(s.get("per_backend_submitted", {})),
+            per_schedd_deficit=dict(s.get("per_schedd_deficit", {})),
+        )
+        self._preview_cache = None
+        self._cohort_filter.clear()
+        self._cohort_sig.clear()
+
     def _submit_pod(self, sig: GroupSignature, label: str, now: float,
                     backend=None):
         backend = backend or self.backends[0]
@@ -329,14 +441,7 @@ class Provisioner:
             pod_name=name,
         )
 
-        def on_start(pod: Pod, t: float, *, _w=worker):
-            _w.booted_at = t + _w.startup_delay
-            self.collector.advertise(_w)
-
-        def on_stop(pod: Pod, t: float, reason: str, *, _w=worker):
-            if reason != "completed":
-                from repro.core.worker import kill_worker
-                kill_worker(self.collector, self.queue, _w.name, t)
+        on_start, on_stop = self._pod_callbacks(worker)
 
         selector = {}
         anti = {}

@@ -52,12 +52,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from typing import Any, Callable, Iterable
 
 import numpy as np
 
 from repro.core.backend import (
-    FederatedClusterView, KubeBackend, build_backends, schedule_backend_on,
+    FederatedClusterView, KubeBackend, build_backends,
 )
 from repro.core.cluster import KubeCluster, Node
 from repro.core.config import ProvisionerConfig
@@ -70,7 +71,9 @@ from repro.core.metrics import (
 from repro.core.nodescaler import NodeAutoscaler, NodeTemplate
 from repro.core.provisioner import Provisioner
 from repro.core.stragglers import StragglerPolicy
-from repro.core.worker import Collector, advance_workers
+from repro.core.worker import (
+    Collector, advance_workers, worker_from_state, worker_state,
+)
 
 # same-timestamp ordering, mirroring the seed's intra-tick sequence
 P_EXTERNAL = 0
@@ -167,6 +170,9 @@ class Simulation:
             )
             backends = [KubeBackend("default", cluster, autoscaler)]
         self.backends = list(backends)
+        # backends drained at runtime move here once empty — kept so
+        # their accrued cost / stats stay in summary()
+        self.detached_backends: list = []
         self.cluster = self.backends[0].cluster
         self.autoscaler = self.backends[0].autoscaler
         self.cluster_view = FederatedClusterView(self.backends)
@@ -197,30 +203,70 @@ class Simulation:
         self.loop = EventLoop()
         self._advanced_until = 0.0
         self._external_pending = 0
+        # every periodic handle is retained by name so runtime
+        # reconfiguration (drain_backend) can cancel a backend's timers
+        # and restore() can re-install the full set on a fresh loop
+        self._timers: dict[str, Any] = {}
+        self._backend_timers: dict[str, list] = {}
         if engine == "event":
             self._install_periodics()
 
+    @staticmethod
+    def _next_cadence(t: float, interval: float, first0: float) -> float:
+        """First point of the periodic grid ``first0 + k*interval``
+        STRICTLY after `t` — restore() re-phases every periodic so a
+        resumed run fires them at exactly the timestamps the
+        uninterrupted run would have (events at `t` itself already fired
+        before a quiescent snapshot)."""
+        k = max(0, math.floor((t - first0) / interval + 1e-9) + 1)
+        return first0 + k * interval
+
+    def _install_backend_timer(self, backend, *, prime: bool,
+                               first: float | None = None):
+        """Periodic tick for one backend, with the drain watch built in:
+        after each tick, a draining backend with zero live pods is
+        detached (claims completed and workers retired — nothing left to
+        let finish).  The handles are retained so drain/restore can
+        cancel or re-install them."""
+        name = backend.name
+        handles = []
+
+        def tick(now: float, dt: float, _b=backend):
+            _b.tick(now, dt)
+            if getattr(_b, "draining", False) and _b.live_pods() == 0:
+                self._detach_backend(_b, now)
+
+        if prime:
+            # zero-dt priming pass so pods submitted by the first
+            # reconcile place immediately (the seed's first tick did)
+            handles.append(self.loop.schedule(
+                self.loop.now, lambda now: tick(now, 0.0),
+                name=f"backend:{name}:prime", priority=P_BACKEND))
+        if first is None:
+            first = self._next_cadence(self.loop.now, self.tick_s, 0.0)
+        handles.append(self.loop.every(
+            self.tick_s, lambda now: tick(now, self.tick_s),
+            first=first, name=f"backend:{name}", priority=P_BACKEND))
+        self._backend_timers[name] = handles
+
     def _install_periodics(self):
         """Exact-cadence control-plane callbacks (the seed polled these
-        every tick, accumulating up to tick_s of drift per period)."""
-        self.provisioner.schedule_on(self.loop, first=0.0,
-                                     priority=P_RECONCILE)
+        every tick, accumulating up to tick_s of drift per period).
+        Install ORDER is part of the determinism contract: events landing
+        on the same (timestamp, priority) fire in install order, and
+        restore() re-installs in this same order."""
+        self._timers["reconcile"] = self.provisioner.schedule_on(
+            self.loop, first=0.0, priority=P_RECONCILE)
         for backend in self.backends:
-            register = getattr(backend, "schedule_on", None)
-            if register is not None:
-                register(self.loop, self.tick_s, priority=P_BACKEND)
-            else:
-                # foreign ScalingBackend without the event-loop hook
-                schedule_backend_on(backend, self.loop, self.tick_s,
-                                    priority=P_BACKEND)
-        self.loop.every(
+            self._install_backend_timer(backend, prime=True)
+        self._timers["negotiate"] = self.loop.every(
             self.negotiate_interval_s, self._negotiate_cb,
             first=0.0, name="negotiate", priority=P_NEGOTIATE)
         if self.straggler_policy is not None:
-            self.loop.every(
+            self._timers["stragglers"] = self.loop.every(
                 self.tick_s, self._straggler_cb,
                 first=self.tick_s, name="stragglers", priority=P_STRAGGLER)
-        self.loop.every(
+        self._timers["metrics"] = self.loop.every(
             self.metrics_interval_s, self._record_cb,
             first=0.0, name="metrics", priority=P_METRICS)
 
@@ -323,6 +369,306 @@ class Simulation:
     def backend(self, name: str):
         return self.provisioner.backend(name)
 
+    # -- runtime reconfiguration (pool service) ------------------------------
+    def drain_backend(self, name: str):
+        """Gracefully retire a backend without restarting the pool: stop
+        routing to it (healthy() goes False), delete its never-placed
+        pending pods, and flag its booted workers `draining` so they take
+        no new claims and retire the moment their running jobs complete.
+        The backend's periodic tick keeps firing until `live_pods()`
+        reaches zero, then `_detach_backend` freezes its accounting and
+        cancels its timers.  Event engine only."""
+        if self.engine != "event":
+            raise ValueError("drain_backend requires engine='event'")
+        b = self.provisioner.backend(name)      # KeyError on unknown
+        b.draining = True
+        now = self.loop.now
+        owned = lambda p: p.labels.get("owner") == "prp-provisioner"
+        for pod in list(b.cluster.pending_pods(owned)):
+            # pending pods never placed — nothing is running on them
+            b.cluster.delete_pod(pod.name, now, "drain")
+        running = {p.name for p in b.cluster.running_pods(owned)}
+        for w in self.collector.workers.values():
+            if w.pod_name in running:
+                w.draining = True
+        if b.live_pods() == 0:
+            self._detach_backend(b, now)
+
+    def _detach_backend(self, b, now: float):
+        """Remove an emptied, draining backend from the live federation:
+        flush its accounting to `now` (cost accrual FREEZES here — a
+        detached backend bills nothing further), cancel its tick timers,
+        and move it to `detached_backends` so summary() still counts its
+        accrued cost, node-seconds, and stats."""
+        b.cluster.tick_accounting(0.0, now)
+        accrue = getattr(b, "accrue_cost", None)
+        if accrue is not None:
+            accrue(now)
+        for h in self._backend_timers.pop(b.name, []):
+            self.loop.cancel(h)
+        self.backends.remove(b)
+        if b in self.provisioner.backends:
+            self.provisioner.backends.remove(b)
+        if b in self.cluster_view.backends:
+            self.cluster_view.backends.remove(b)
+        self.detached_backends.append(b)
+
+    def add_backend(self, backend):
+        """Attach a new resource provider at runtime.  Its periodic tick
+        lands on the same global tick grid as the original backends (next
+        multiple of tick_s), preceded by a zero-dt priming pass so the
+        next reconcile's pods place immediately.  Cost accrual and node
+        alive-time start at attach, not at the epoch."""
+        if self.engine != "event":
+            raise ValueError("add_backend requires engine='event'")
+        taken = ({b.name for b in self.backends}
+                 | {b.name for b in self.detached_backends})
+        if backend.name in taken:
+            raise ValueError(f"backend {backend.name!r} already exists")
+        rebase = getattr(backend, "rebase", None)
+        if rebase is not None:
+            rebase(self.loop.now)
+        self.backends.append(backend)
+        self.provisioner.backends.append(backend)
+        self.cluster_view.backends.append(backend)
+        self._install_backend_timer(backend, prime=True)
+
+    def add_schedd(self, name: str, *, quota: float = 1.0):
+        """Attach a new submit host at runtime (flocking pools only).
+        The queue shares the pool-unique jid counter, joins the flocking
+        negotiation order LAST, and gets a fair-share quota if an
+        accountant is wired."""
+        if not self.flocking:
+            raise ValueError(
+                "add_schedd requires a flocking simulation "
+                "(construct with schedds=... or fairshare=...)")
+        if any(q.name == name for q in self.queues):
+            raise ValueError(f"schedd {name!r} already exists")
+        q = JobQueue(name=name, ids=self.queues[0]._ids)
+        self.queues.append(q)
+        self.pool_queue.queues.append(q)
+        self.provisioner.queues.append(q)
+        self.provisioner.schedd_quotas[name] = quota
+        if self.accountant is not None:
+            self.accountant.set_quota(name, quota)
+            self.accountant.attach_queue(name, q)
+        self.schedd_specs.append(ScheddSpec(name=name, quota=quota))
+        return q
+
+    def drain_schedd(self, name: str):
+        """Stop accepting submissions on one schedd; its queued and
+        running jobs keep negotiating and complete normally.  Call
+        `detach_schedd` once it has fully drained."""
+        self.queue_named(name).draining = True
+
+    def detach_schedd(self, name: str):
+        """Remove a drained, empty schedd from the federation.  The
+        accountant keeps its historical usage (decayed as usual)."""
+        q = self.queue_named(name)
+        if not q.draining:
+            raise ValueError(f"schedd {name!r} is not draining")
+        if not q.drained():
+            raise ValueError(f"schedd {name!r} still has jobs")
+        if len(self.queues) == 1:
+            raise ValueError("cannot detach the last schedd")
+        self.queues.remove(q)
+        self.pool_queue.queues.remove(q)
+        self.provisioner.queues.remove(q)
+        self.provisioner.schedd_quotas.pop(name, None)
+        self.schedd_specs = [s for s in self.schedd_specs
+                             if s.name != name]
+        self.queue = self.queues[0]
+        self.provisioner.queue = self.provisioner.queues[0]
+
+    # -- snapshot / resume ---------------------------------------------------
+    def state_dict(self, *, allow_pending_external: bool = False) -> dict:
+        """Serialize the COMPLETE pool state as a JSON-safe dict, such
+        that `restore()` on a freshly constructed, identically configured
+        Simulation continues bit-identically to the uninterrupted run.
+
+        Iteration orders are state here (advertise order drives
+        advance_workers, node order breaks best-fit ties, cohort order
+        drives negotiation FIFO) — every dict below is serialized in its
+        live order and rebuilt by insertion, never recomputed or sorted.
+
+        Requires a QUIESCENT instant: every event at `self.now` has
+        fired (run()/the service driver guarantee this between timestamp
+        groups).  Periodic timers are NOT serialized — restore()
+        re-installs them re-phased onto their original grids.  External
+        events scheduled via `at()` cannot be serialized (arbitrary
+        closures); callers owning such events as data — the pool service
+        keeps its pending arrivals as trace records — pass
+        `allow_pending_external=True` and re-schedule them after
+        restore().  Straggler-policy internal memory is not carried."""
+        if self.engine != "event":
+            raise ValueError("state_dict requires engine='event'")
+        if self._external_pending > 0 and not allow_pending_external:
+            raise ValueError(
+                f"{self._external_pending} external event(s) still "
+                "pending — their closures cannot be serialized; either "
+                "run past them or pass allow_pending_external=True and "
+                "re-schedule them after restore()")
+        nxt = self.loop.next_at()
+        if nxt is not None and nxt <= self.now:
+            raise ValueError(
+                f"snapshot requires a quiescent instant: events still "
+                f"due at t={nxt} (now={self.now})")
+        self._flush_accounting()
+        # peek the shared jid counter non-destructively
+        next_jid = next(self.queues[0]._ids)
+        shared = itertools.count(next_jid)
+        for q in self.queues:
+            q._ids = shared
+        state: dict[str, Any] = {
+            "version": 1,
+            "t": self.now,
+            "flocking": self.flocking,
+            "next_jid": next_jid,
+            "schedds": [{"name": s.name, "quota": s.quota}
+                        for s in self.schedd_specs],
+            "queues": [q.state_dict() for q in self.queues],
+            "accountant": (self.accountant.state_dict()
+                           if self.accountant is not None else None),
+            "workers": [worker_state(w) for w in self.all_workers],
+            "advertised": list(self.collector.workers.keys()),
+            "backends": [b.state_dict() for b in self.backends],
+            "detached_backends": [b.state_dict()
+                                  for b in self.detached_backends],
+            "provisioner": self.provisioner.state_dict(),
+            "recorder": {
+                "series": {k: [[t, v] for t, v in pts]
+                           for k, pts in self.recorder.series.items()},
+                "last_sample": self.recorder._last_sample,
+                "sample_interval_s": self.recorder.sample_interval_s,
+            },
+            "rng": self.rng.bit_generator.state,
+            "last_negotiate": self._last_negotiate,
+        }
+        return state
+
+    def restore(self, state: dict):
+        """Load a `state_dict()` snapshot into this freshly constructed
+        Simulation (same config, same constructor arguments; schedds
+        added at runtime before the snapshot are re-created here, but
+        runtime-added BACKENDS must be `add_backend`ed by the caller
+        first — the pool service does this from its stored config).  A
+        fresh EventLoop is started at the snapshot time and every
+        periodic is re-installed, in original install order, re-phased
+        onto its original cadence grid."""
+        if self.engine != "event":
+            raise ValueError("restore requires engine='event'")
+        if self.now != 0.0 or self.all_workers:
+            raise ValueError(
+                "restore() requires a freshly constructed Simulation")
+        if bool(state["flocking"]) != self.flocking:
+            raise ValueError("flocking mismatch between snapshot and sim")
+
+        # schedds: re-create runtime-added ones, then validate order
+        specs = state["schedds"]
+        for spec in specs[len(self.queues):]:
+            self.add_schedd(spec["name"],
+                            quota=float(spec.get("quota", 1.0)))
+        names = [q.name for q in self.queues]
+        if names != [s["name"] for s in specs]:
+            raise ValueError(
+                f"schedd mismatch: snapshot has "
+                f"{[s['name'] for s in specs]}, sim has {names}")
+
+        shared = itertools.count(int(state["next_jid"]))
+        for q, qs in zip(self.queues, state["queues"]):
+            q._ids = shared
+            q.load_state(qs)
+        jobs_by_jid = {j.jid: j
+                       for q in self.queues for j in q._jobs.values()}
+
+        acc_state = state.get("accountant")
+        if (acc_state is None) != (self.accountant is None):
+            raise ValueError(
+                "accountant presence mismatch between snapshot and sim")
+        if acc_state is not None:
+            self.accountant.restore(acc_state)
+
+        self.all_workers = [worker_from_state(ws, jobs_by_jid)
+                            for ws in state["workers"]]
+        by_name = {w.name: w for w in self.all_workers}
+        self.collector.workers = {n: by_name[n]
+                                  for n in state["advertised"]}
+
+        live = {b.name: b for b in self.backends}
+        for bs in state["backends"]:
+            b = live.get(bs["name"])
+            if b is None:
+                raise ValueError(
+                    f"snapshot backend {bs['name']!r} not present — "
+                    "add_backend() it before restore()")
+            b.load_state(bs)
+        for ds in state["detached_backends"]:
+            b = live.get(ds["name"])
+            if b is None:
+                raise ValueError(
+                    f"snapshot detached backend {ds['name']!r} not "
+                    "present — add_backend() it before restore()")
+            b.load_state(ds)
+            self.backends.remove(b)
+            self.provisioner.backends.remove(b)
+            self.cluster_view.backends.remove(b)
+            self.detached_backends.append(b)
+        want = [bs["name"] for bs in state["backends"]]
+        have = [b.name for b in self.backends]
+        if have != want:
+            raise ValueError(
+                f"backend order mismatch: snapshot {want}, sim {have}")
+
+        self.provisioner.load_state(state["provisioner"])
+        self.provisioner.rewire_pods(by_name)
+
+        rec = state["recorder"]
+        self.recorder.series = {
+            k: [(float(t), float(v)) for t, v in pts]
+            for k, pts in rec["series"].items()}
+        self.recorder._last_sample = float(rec["last_sample"])
+        if rec.get("sample_interval_s") is not None:
+            self.recorder.sample_interval_s = rec["sample_interval_s"]
+
+        self.rng.bit_generator.state = state["rng"]
+        self._last_negotiate = float(state["last_negotiate"])
+
+        t = float(state["t"])
+        self.loop = EventLoop(t)
+        self.now = t
+        self._advanced_until = t
+        self._external_pending = 0
+        self._timers = {}
+        self._backend_timers = {}
+        self._reinstall_periodics_at(t)
+        return self
+
+    def _reinstall_periodics_at(self, t: float):
+        """Re-install every periodic on a fresh loop, re-phased onto its
+        ORIGINAL grid (reconcile/negotiate/metrics anchored at 0,
+        backends on the tick grid, stragglers offset one tick), in the
+        same order as `_install_periodics` — same-(t, priority) firing
+        order is part of the determinism contract."""
+        self._timers["reconcile"] = self.provisioner.schedule_on(
+            self.loop,
+            first=self._next_cadence(t, self.cfg.submit_interval_s, 0.0),
+            priority=P_RECONCILE)
+        for backend in self.backends:
+            self._install_backend_timer(backend, prime=False)
+        self._timers["negotiate"] = self.loop.every(
+            self.negotiate_interval_s, self._negotiate_cb,
+            first=self._next_cadence(t, self.negotiate_interval_s, 0.0),
+            name="negotiate", priority=P_NEGOTIATE)
+        if self.straggler_policy is not None:
+            self._timers["stragglers"] = self.loop.every(
+                self.tick_s, self._straggler_cb,
+                first=self._next_cadence(t, self.tick_s, self.tick_s),
+                name="stragglers", priority=P_STRAGGLER)
+        self._timers["metrics"] = self.loop.every(
+            self.metrics_interval_s, self._record_cb,
+            first=self._next_cadence(t, self.metrics_interval_s, 0.0),
+            name="metrics", priority=P_METRICS)
+
     # -- event helpers -------------------------------------------------------
     def at(self, t: float, fn: Callable[["Simulation", float], None],
            name: str = ""):
@@ -366,6 +712,10 @@ class Simulation:
         iterables are consumed exactly once: re-running the simulation
         needs a fresh one."""
         target = self.queue_named(schedd)
+        if getattr(target, "draining", False):
+            raise ValueError(
+                f"schedd {target.name!r} is draining and accepts no "
+                "new submissions")
         if isinstance(jobs, (list, tuple)):
             batch = list(jobs)
 
@@ -558,14 +908,17 @@ class Simulation:
                 "deprovisioned": self.autoscaler.deprovisioned_total,
                 "waste_fraction": self.autoscaler.waste_fraction(),
             }
+        # detached (drained) backends stopped accruing at detach but
+        # their history still counts toward utilization and spend
+        every = self.backends + self.detached_backends
         cap = busy = 0.0
-        for b in self.backends:
+        for b in every:
             c, u = b.cluster.resource_seconds("gpu")
             cap += c
             busy += u
         out["gpu_utilization"] = busy / cap if cap > 0 else 0.0
-        out["cost_total"] = sum(b.stats.cost_total for b in self.backends)
-        out["backends"] = summarize_backends(self.backends)
+        out["cost_total"] = sum(b.stats.cost_total for b in every)
+        out["backends"] = summarize_backends(every)
         return out
 
 

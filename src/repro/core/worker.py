@@ -156,6 +156,10 @@ class Worker:
     idle_since: float = -1.0
     claimed: dict[int, Job] = dataclasses.field(default_factory=dict)
     terminated: bool = False
+    # a draining worker (its backend is being detached) takes NO new
+    # claims — the negotiator/preview skip it via alive_workers — and
+    # self-terminates as soon as its current claims complete
+    draining: bool = False
     # accounting
     busy_s: float = 0.0
     alive_s: float = 0.0
@@ -221,6 +225,53 @@ class Worker:
         return self._match_key
 
 
+# -- worker (de)serialization -------------------------------------------------
+def worker_state(w: Worker) -> dict:
+    """JSON-safe snapshot: the START expression serializes as source
+    text, claims as an ORDERED jid list (the claim dict's iteration
+    order feeds completion order for same-instant finishes).  The cached
+    resource vectors are NOT serialized — `worker_from_state` rebuilds
+    `_used_vec` through `add_claim`, summing the same small integral
+    requests, so the float result is identical."""
+    return {
+        "name": w.name,
+        "ad": dict(w.ad),
+        "start_src": w.start_expr.src,
+        "idle_timeout": float(w.idle_timeout),
+        "startup_delay": float(w.startup_delay),
+        "pod_name": w.pod_name,
+        "work_rate": w.work_rate,
+        "booted_at": w.booted_at,
+        "idle_since": w.idle_since,
+        "terminated": w.terminated,
+        "draining": w.draining,
+        "busy_s": w.busy_s,
+        "alive_s": w.alive_s,
+        "claimed": list(w.claimed.keys()),
+    }
+
+
+def worker_from_state(state: dict, jobs_by_jid: dict[int, Job]) -> Worker:
+    w = Worker(
+        name=state["name"],
+        ad=dict(state["ad"]),
+        start_expr=ClassAdExpr(state["start_src"]),
+        idle_timeout=float(state.get("idle_timeout", 300.0)),
+        startup_delay=float(state.get("startup_delay", 30.0)),
+        pod_name=state.get("pod_name"),
+        work_rate=float(state.get("work_rate", 1.0)),
+    )
+    w.booted_at = float(state.get("booted_at", -1.0))
+    w.idle_since = float(state.get("idle_since", -1.0))
+    w.terminated = bool(state.get("terminated", False))
+    w.draining = bool(state.get("draining", False))
+    w.busy_s = float(state.get("busy_s", 0.0))
+    w.alive_s = float(state.get("alive_s", 0.0))
+    for jid in state.get("claimed", []):
+        w.add_claim(jobs_by_jid[int(jid)])
+    return w
+
+
 class Collector:
     """Pool registry + negotiator."""
 
@@ -264,14 +315,15 @@ class Collector:
         return n
 
     def alive_workers(self, now: float) -> list[Worker]:
-        return [w for w in self.workers.values() if w.ready(now)]
+        return [w for w in self.workers.values()
+                if w.ready(now) and not w.draining]
 
     def unclaimed_capacity(self, group_matcher=None) -> int:
         """Workers with zero claims (counted by the provisioner against the
         deficit so it never over-submits; paper §2)."""
         n = 0
         for w in self.workers.values():
-            if w.terminated or w.claimed:
+            if w.terminated or w.draining or w.claimed:
                 continue
             if group_matcher is None or group_matcher(w.ad):
                 n += 1
@@ -865,6 +917,15 @@ def advance_workers(
                 #                          segment start
         if w.claimed:
             w.idle_since = -1.0
+            continue
+        if w.draining:
+            # backend drain: claims done — retire immediately instead of
+            # waiting out idle_timeout (no new claims can arrive anyway)
+            w.terminated = True
+            terminated.append(w.name)
+            collector.invalidate(w.name)
+            if w.pod_name is not None and cluster is not None:
+                cluster.succeed_pod(w.pod_name, t1)
             continue
         # idle: does any matching idle job exist? (C2 poll)
         if scan_matches:

@@ -207,3 +207,33 @@ def test_node_autoscaler_tracks_demand_and_scales_down():
         sim.autoscaler.provisioned_total
     # deprovision waste exists but bounded (paper: "close to minimum")
     assert 0 < sim.autoscaler.waste_fraction() < 0.6
+
+
+# ---------------------------------------------------------------------------
+# Preview memoization: the dry-run packing is cached on
+# (idle-queue version, free-capacity digest) and invalidated by either
+# ---------------------------------------------------------------------------
+
+def test_preview_memo_hits_when_nothing_changed():
+    sim = mk_sim()
+    sim.submit_jobs(0, [gpu_job(600) for _ in range(4)])
+    sim.run(35)    # a couple of reconciles have populated the cache
+    p = sim.provisioner
+    assert p.preview_misses >= 1
+    p.reconcile(sim.now)        # may miss: workers became ready since t=30
+    hits0, misses0 = p.preview_hits, p.preview_misses
+    p.reconcile(sim.now)        # identical queue + identical free matrix
+    assert p.preview_hits == hits0 + 1
+    assert p.preview_misses == misses0
+
+
+def test_preview_memo_invalidated_by_new_demand():
+    sim = mk_sim()
+    sim.submit_jobs(0, [gpu_job(600) for _ in range(4)])
+    sim.run(35)
+    p = sim.provisioner
+    p.reconcile(sim.now)                        # warm the cache at now
+    misses0 = p.preview_misses
+    sim.queue.submit(gpu_job(600), sim.now)     # bumps idle_version
+    p.reconcile(sim.now)
+    assert p.preview_misses == misses0 + 1

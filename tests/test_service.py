@@ -1,0 +1,304 @@
+"""Pool-service subsystem tests: wall-clock driver, in-process and HTTP
+clients, runtime reconfiguration (drain/add backends and schedds), and
+the drained-backend-schedules-zero-further-events regression."""
+import sys
+import time
+import urllib.error
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.service import PoolClient, PoolService, WallClockDriver  # noqa: E402
+from repro.service.http import serve_in_thread  # noqa: E402
+from repro.service.pool import RemoteClient  # noqa: E402
+from repro.workload.trace import TraceRecord  # noqa: E402
+
+# small 2-provider federation so tests drain in well under a second of
+# wall time when batch-driven
+SERVICE_INI = """\
+[provision]
+submit_interval_s=30
+idle_timeout_s=240
+startup_delay_s=15
+
+[backend:onprem]
+kind=static
+nodes=2
+capacity_dict=cpu:8,gpu:4,memory:64,disk:256
+
+[backend:cloud]
+kind=autoscale
+capacity_dict=cpu:8,gpu:4,memory:64,disk:256
+max_nodes=4
+node_hourly_cost=1.0
+provision_delay_s=30
+scale_down_delay_s=120
+"""
+
+BURST_INI = """\
+[backend:burst]
+kind=autoscale
+capacity_dict=cpu:8,gpu:4,memory:64,disk:256
+max_nodes=4
+node_hourly_cost=1.0
+provision_delay_s=30
+scale_down_delay_s=120
+"""
+
+
+def rec(runtime_s=120.0, arrival_s=0.0, **kw):
+    return TraceRecord(arrival_s=arrival_s, runtime_s=runtime_s, **kw)
+
+
+def mk_service(**kw):
+    kw.setdefault("tick_s", 5.0)
+    kw.setdefault("negotiate_interval_s", 15.0)
+    kw.setdefault("metrics_interval_s", 60.0)
+    kw.setdefault("speed", None)
+    return PoolService(SERVICE_INI, **kw)
+
+
+# -- submission surface ------------------------------------------------------
+
+def test_submit_now_runs_to_completion():
+    svc = mk_service()
+    c = PoolClient(svc)
+    r = c.submit([rec(runtime_s=300.0) for _ in range(8)])
+    assert len(r["jids"]) == 8
+    assert c.job_status(r["jids"][0])["state"] in ("idle", "running")
+    svc.run_until_drained()
+    st = c.status()
+    assert st["drained"]
+    assert st["completed"] == 8
+    assert c.job_status(r["jids"][0])["state"] == "completed"
+    assert svc.completed_stats().n == 8
+
+
+def test_at_trace_times_goes_through_pending_ledger():
+    svc = mk_service()
+    c = PoolClient(svc)
+    r = c.submit([{"arrival_s": 100.0 * (i + 1), "runtime_s": 200.0}
+                  for i in range(4)], at_trace_times=True, at=0.0)
+    assert r["scheduled"] == 4
+    st = c.status()
+    assert st["pending_ops"] == 4
+    assert not st["drained"]          # pending arrivals block drained
+    svc.run_until_drained()
+    st = c.status()
+    assert st["pending_ops"] == 0
+    assert st["drained"] and st["completed"] == 4
+
+
+def test_rm_idle_and_running_job():
+    svc = mk_service()
+    c = PoolClient(svc)
+    jids = c.submit([rec(runtime_s=5000.0) for _ in range(2)])["jids"]
+    svc.sim.run(120.0)                # past startup: jobs are running
+    assert c.job_status(jids[0])["state"] == "running"
+    out = c.rm(jids[0])
+    assert out["removed"]
+    assert c.job_status(jids[0])["state"] == "removed"
+    again = c.rm(jids[0])             # second rm: gone, terminal record
+    assert not again["removed"]
+    assert again["terminal"]["state"] == "removed"
+    c.rm(jids[1])
+    svc.run_until_drained()
+    assert c.status()["drained"]
+    assert svc.completed_stats().n == 0
+
+
+def test_submit_validation_rejects_bad_record():
+    svc = mk_service()
+    with pytest.raises(Exception):
+        svc.submit([{"arrival_s": 0.0, "runtime_s": -5.0}])
+
+
+# -- wall-clock driver -------------------------------------------------------
+
+def test_driver_paced_time_warp_drains_while_polling():
+    svc = mk_service(speed=5000.0)
+    c = PoolClient(svc)
+    svc.start()
+    try:
+        assert svc.driver.running
+        c.submit([rec(runtime_s=60.0) for _ in range(3)])
+        deadline = time.monotonic() + 30.0
+        st = {}
+        while time.monotonic() < deadline:
+            st = c.status()           # concurrent injection while running
+            if st["drained"] and st["completed"] == 3:
+                break
+            time.sleep(0.02)
+        assert st.get("drained") and st.get("completed") == 3, st
+    finally:
+        svc.stop()
+    # graceful stop leaves the sim quiescent -> snapshot just works
+    snap = svc.snapshot()
+    assert snap["sim"]["t"] == svc.sim.now
+
+
+def test_driver_as_fast_idles_when_drained():
+    svc = mk_service(speed=None)
+    c = PoolClient(svc)
+    svc.start()
+    try:
+        c.submit([rec(runtime_s=60.0)])
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            if c.status()["drained"]:
+                break
+            time.sleep(0.02)
+        t1 = c.status()["t"]
+        time.sleep(0.25)
+        t2 = c.status()["t"]
+        # periodic timers alone must not spin the simulated clock
+        assert t2 == t1
+        # a late submission wakes it back up
+        c.submit([rec(runtime_s=30.0)])
+        deadline = time.monotonic() + 30.0
+        st = {}
+        while time.monotonic() < deadline:
+            st = c.status()
+            if st["drained"] and st["completed"] == 2:
+                break
+            time.sleep(0.02)
+        assert st.get("completed") == 2
+    finally:
+        svc.stop()
+
+
+def test_driver_inline_call_settles_fresh_sim():
+    svc = mk_service()
+    # a fresh sim has a full t=0 event group pending; call() must settle
+    # it so an immediate snapshot sees a quiescent instant
+    snap = svc.snapshot()
+    assert snap["sim"]["t"] == 0.0
+
+
+def test_driver_rejects_bad_speed():
+    svc = mk_service()
+    with pytest.raises(ValueError):
+        WallClockDriver(svc.sim, speed=0.0)
+    with pytest.raises(RuntimeError):
+        svc.start()
+        try:
+            svc.start()               # double-start
+        finally:
+            svc.stop()
+
+
+# -- HTTP surface ------------------------------------------------------------
+
+def test_http_round_trip():
+    svc = mk_service()
+    server, url = serve_in_thread(svc)
+    try:
+        rc = RemoteClient(url)
+        assert rc.healthz()["ok"]
+        r = rc.submit([rec(runtime_s=300.0).to_obj() for _ in range(5)])
+        assert len(r["jids"]) == 5
+        svc.run_until_drained()
+        st = rc.status()
+        assert st["drained"] and st["completed"] == 5
+        assert rc.job_status(r["jids"][0])["state"] == "completed"
+        m = rc.metrics()
+        for key in ("gauges", "backends", "series"):
+            assert key in m
+        for g in ("idle_jobs", "running_jobs", "provisioned_cores",
+                  "cost_rate", "cost_total"):
+            assert g in m["gauges"]
+        for s in ("idle_jobs", "running_jobs", "provisioned_cores",
+                  "cost_rate"):
+            assert s in m["series"]
+        with pytest.raises(urllib.error.HTTPError) as e404:
+            rc._get("/no-such-route")
+        assert e404.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as e400:
+            rc._post("/rm", {})       # missing jid -> KeyError -> 400
+        assert e400.value.code == 400
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+# -- runtime reconfiguration -------------------------------------------------
+
+def test_drained_backend_schedules_zero_further_events():
+    """Satellite regression: once a backend is drained and detached, NO
+    further events fire for it — no ticks, no heap entries."""
+    svc = mk_service()
+    c = PoolClient(svc)
+    c.submit([rec(runtime_s=400.0) for _ in range(30)])
+    svc.sim.run(300.0)                # let cloud scale up / claim work
+    cloud = svc.sim.backend("cloud")
+    c.drain_backend("cloud")
+    assert cloud.draining and not cloud.healthy()
+    svc.run_until_drained()
+    # detach happens on the backend's next tick after its last pod ends
+    svc.sim.run(svc.sim.now + 2 * svc.sim.tick_s)
+    assert [b.name for b in svc.sim.detached_backends] == ["cloud"]
+    assert all(b.name != "cloud" for b in svc.sim.backends)
+    # instrument the detached backend and run well past several tick
+    # cadences: it must never be ticked again
+    calls = []
+    cloud.tick = lambda *a, **kw: calls.append(a)
+    live = [e for e in svc.sim.loop._heap
+            if not e[3].cancelled and "backend:cloud" in (e[3].name or "")]
+    assert live == []
+    svc.sim.run(svc.sim.now + 20 * svc.sim.tick_s)
+    assert calls == []
+    # the detached backend still appears in the pool summary
+    assert "cloud" in svc.sim.summary()["backends"]
+
+
+def test_add_backend_at_runtime_rebases_billing():
+    svc = mk_service()
+    c = PoolClient(svc)
+    c.submit([rec(runtime_s=600.0) for _ in range(40)])
+    svc.sim.run(600.0)
+    t_add = svc.sim.now
+    r = c.add_backend(BURST_INI)
+    assert r["added"] == ["burst"]
+    b = svc.sim.backend("burst")
+    assert b._cost_t == t_add         # no billing from epoch 0
+    svc.run_until_drained()
+    assert all(n.created_at >= t_add for n in b.cluster.nodes.values())
+    assert svc.completed_stats().n == 40
+    # duplicate add is refused
+    with pytest.raises(ValueError):
+        svc.add_backend(BURST_INI)
+
+
+def test_add_drain_detach_schedd_at_runtime():
+    svc = PoolService(SERVICE_INI, schedds=2, fairshare=True,
+                      tick_s=5.0, negotiate_interval_s=15.0,
+                      metrics_interval_s=60.0)
+    c = PoolClient(svc)
+    c.add_schedd("schedd-extra", quota=0.5)
+    assert "schedd-extra" in svc.status()["schedds"]
+    c.submit([rec(runtime_s=120.0) for _ in range(3)],
+             schedd="schedd-extra")
+    c.drain_schedd("schedd-extra")
+    assert svc.status()["schedds"]["schedd-extra"]["draining"]
+    with pytest.raises(ValueError):
+        c.submit([rec()], schedd="schedd-extra")
+    svc.run_until_drained()
+    st = svc.status()
+    assert st["drained"]
+    assert st["schedds"]["schedd-extra"]["completed"] == 3
+    svc.detach_schedd("schedd-extra")
+    assert "schedd-extra" not in svc.status()["schedds"]
+
+
+def test_deferred_drain_via_ledger():
+    svc = mk_service()
+    c = PoolClient(svc)
+    c.submit([rec(runtime_s=300.0) for _ in range(10)])
+    out = c.drain_backend("cloud", at=200.0)
+    assert out["drain_at"] == 200.0
+    assert svc.status()["pending_ops"] == 1
+    svc.run_until_drained()
+    assert [b.name for b in svc.sim.detached_backends] == ["cloud"]
+    assert svc.status()["pending_ops"] == 0

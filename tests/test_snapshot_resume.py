@@ -1,0 +1,179 @@
+"""Snapshot/resume correctness: JSON round-trips, the
+snapshot->restore->snapshot fixed point, the differential guarantee
+(an interrupted run continues EXACTLY like the uninterrupted one), the
+state_dict preconditions, and the service-level ledger resume."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import (  # noqa: E402
+    NodeTemplate, ProvisionerConfig, Simulation, gpu_job, onprem_nodes,
+)
+from repro.service import PoolClient, PoolService  # noqa: E402
+
+CAP = {"cpu": 16, "gpu": 4, "memory": 64, "disk": 256}
+
+
+def build(seed=3):
+    """Flocking + fair-share + autoscaling sim — exercises every
+    serialized subsystem (queues, accountant, workers, backends,
+    provisioner, recorder, rng)."""
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=120,
+                            startup_delay_s=30)
+    return Simulation(cfg, nodes=onprem_nodes(2, gpus=4, cpus=16),
+                      node_template=NodeTemplate(capacity=dict(CAP)),
+                      max_nodes=8, schedds=2, fairshare=True,
+                      tick_s=5.0, negotiate_interval_s=15.0, seed=seed)
+
+
+def seed_jobs(sim):
+    for i in range(40):
+        sim.submit_jobs(10.0 * i,
+                        [gpu_job(300.0 + 20.0 * (i % 7),
+                                 gpus=1 + (i % 2))],
+                        schedd=i % 2)
+
+
+def canon(obj) -> str:
+    return json.dumps(obj, sort_keys=True, default=str)
+
+
+# -- round trip + fixed point ------------------------------------------------
+
+def test_state_dict_json_round_trips_and_is_fixed_point():
+    sim = build()
+    seed_jobs(sim)
+    sim.run(400.0)
+    state = json.loads(json.dumps(sim.state_dict()))
+    sim2 = build()
+    sim2.restore(state)
+    state2 = json.loads(json.dumps(sim2.state_dict()))
+    assert canon(state2) == canon(state)
+
+
+# -- the differential guarantee ----------------------------------------------
+
+def test_interrupted_run_matches_uninterrupted():
+    ref = build()
+    seed_jobs(ref)
+    ref.run(400.0)
+    cut = build()
+    seed_jobs(cut)
+    cut.run(400.0)
+    state = json.loads(json.dumps(cut.state_dict()))
+
+    resumed = build()       # fresh process: nothing shared with `cut`
+    resumed.restore(state)
+
+    ref.run_until_drained(20000.0)
+    resumed.run_until_drained(20000.0)
+    assert canon(resumed.summary()) == canon(ref.summary())
+    assert resumed.recorder.series == ref.recorder.series
+    assert resumed.now == ref.now
+
+
+# -- preconditions -----------------------------------------------------------
+
+def test_state_dict_requires_quiescence():
+    sim = build()
+    seed_jobs(sim)
+    with pytest.raises(ValueError):
+        sim.state_dict()    # fresh sim: the whole t=0 group is due
+    sim.run(400.0)          # past the last seeded arrival (t=390)
+    sim.state_dict()        # after run(): quiescent, fine
+
+
+def test_state_dict_gates_pending_external_events():
+    sim = build()
+    sim.run(50.0)
+    sim.at(500.0, lambda s, now: None)
+    with pytest.raises(ValueError):
+        sim.state_dict()
+    sim.state_dict(allow_pending_external=True)
+
+
+def test_state_dict_requires_event_engine():
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=120,
+                            startup_delay_s=30)
+    sim = Simulation(cfg, nodes=onprem_nodes(2, gpus=4, cpus=16),
+                     engine="tick", tick_s=5.0)
+    with pytest.raises(ValueError):
+        sim.state_dict()
+
+
+def test_restore_requires_fresh_sim():
+    sim = build()
+    seed_jobs(sim)
+    sim.run(400.0)
+    state = sim.state_dict()
+    with pytest.raises(ValueError):
+        sim.restore(state)  # non-fresh target
+
+
+def test_restore_refuses_flocking_mismatch():
+    sim = build()
+    seed_jobs(sim)
+    sim.run(400.0)
+    state = sim.state_dict()
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=120,
+                            startup_delay_s=30)
+    plain = Simulation(cfg, nodes=onprem_nodes(2, gpus=4, cpus=16),
+                       tick_s=5.0)
+    with pytest.raises(ValueError):
+        plain.restore(state)
+
+
+# -- service-level resume (pending-op ledger) --------------------------------
+
+SERVICE_INI = """\
+[provision]
+submit_interval_s=30
+idle_timeout_s=240
+startup_delay_s=15
+
+[backend:onprem]
+kind=static
+nodes=2
+capacity_dict=cpu:8,gpu:4,memory:64,disk:256
+
+[backend:cloud]
+kind=autoscale
+capacity_dict=cpu:8,gpu:4,memory:64,disk:256
+max_nodes=4
+node_hourly_cost=1.0
+provision_delay_s=30
+scale_down_delay_s=120
+"""
+
+RECORDS = [{"arrival_s": 40.0 * i, "runtime_s": 300.0 + 10.0 * (i % 5),
+            "cpus": 1 + i % 3, "user": f"user{i % 3:02d}"}
+           for i in range(30)]
+
+
+def mk_service():
+    return PoolService(SERVICE_INI, tick_s=5.0,
+                       negotiate_interval_s=15.0,
+                       metrics_interval_s=60.0, speed=None)
+
+
+def test_service_resume_with_pending_arrivals_matches_reference():
+    ref = mk_service()
+    PoolClient(ref).submit(RECORDS, at_trace_times=True, at=0.0)
+    ref.run_until_drained()
+
+    cut = mk_service()
+    PoolClient(cut).submit(RECORDS, at_trace_times=True, at=0.0)
+    cut.sim.run(400.0)      # mid-run: arrivals still in the ledger
+    snap = json.loads(json.dumps(cut.snapshot()))
+    assert any(e["kind"] == "submit" for e in snap["service"]["pending"])
+
+    resumed = PoolService.resume(snap)
+    resumed.run_until_drained()
+    assert canon(resumed.summary()) == canon(ref.summary())
+    assert (canon(resumed.completed_stats().state_dict())
+            == canon(ref.completed_stats().state_dict()))
+    assert resumed.status()["drained"]
