@@ -20,9 +20,23 @@ host->device transfer of the cycle's arrays — it is the steady-state
 per-cycle cost a simulation pays.  `identical` is a hard gate: a fast
 wrong matchmaker fails the bench before any ratio is read.
 
+The END-TO-END tier (ISSUE 8) times the whole Collector pipeline —
+problem build from live cohorts, match, claim apply-back — over a
+K-wave submission campaign, three series on identical pools:
+
+    numpy      K × run_cycle against the NumPy reference
+    jax        K × run_cycle against the jitted water-fill (per-cycle
+               dispatch: K problem builds, K device round-trips)
+    fused      K × stage_cycle + one flush through the fused K-cycle
+               jit (ONE problem build, ONE device dispatch)
+
+`e2e_identical` gates all three claim maps (jid, worker, timestamp)
+bitwise; `--e2e-min-ratio` gates jax_s / fused_s at the first tier.
+
 Usage:
     python benchmarks/bench_matchmaking.py [--tiers 10k,100k,1m]
         [--budget-s SECONDS] [--min-ratio 5] [--repeats 3]
+        [--e2e-min-ratio 1.5]
 """
 from __future__ import annotations
 
@@ -76,10 +90,96 @@ def best_of(fn, repeats: int) -> float:
     return best
 
 
-def run(echo: bool = True, tiers=("10k", "100k"), repeats: int = 5):
+# -- end-to-end tier: Collector build -> match -> apply over K waves ---------
+
+E2E = {
+    # waves of NEW cohort shapes (memory varies per wave) so early full
+    # drains never re-arrive — the fused batch stays on the jit path
+    "10k": dict(jobs=10_000, waves=16, W=128, cpus=64),
+    "100k": dict(jobs=100_000, waves=16, W=512, cpus=64),
+}
+
+
+def _e2e_pool(matchmaker, spec, batch: int):
+    """A fresh pool + pre-loaded K-wave queue (setup is NOT timed).
+    Workers pre-boot at t=0 and absorb roughly a third of the campaign;
+    wave k's jobs carry submit time t_k - 1, so the staged flush and the
+    `max_submit` replay see identical per-cycle visibility."""
+    from repro.core.classad import ClassAdExpr
+    from repro.core.jobqueue import Job, JobQueue
+    from repro.core.worker import Collector, Worker
+
+    col = Collector(matchmaker=matchmaker, negotiation_batch=batch)
+    for i in range(spec["W"]):
+        w = Worker(name=f"w{i}", ad={"cpus": spec["cpus"], "memory": 8192},
+                   start_expr=ClassAdExpr("True"))
+        w.booted_at = 0.0
+        col.advertise(w)
+    q = JobQueue()
+    waves = spec["waves"]
+    per_wave = spec["jobs"] // waves
+    times = [60.0 * (k + 1) for k in range(waves)]
+    for k, t in enumerate(times):
+        for i in range(per_wave):
+            q.submit(Job(ad={"request_cpus": 1 + (i % 4),
+                             "request_memory": 4 + 8 * k,   # new shapes/wave
+                             "owner": f"u{i % 4}",
+                             "runtime_s": 1e6}), now=t - 1.0)
+    return col, q, times
+
+
+def _claim_map(q):
+    return sorted((j.jid, j.claimed_by, j.attempt_started_at)
+                  for j in q.jobs() if j.claimed_by is not None)
+
+
+def run_e2e(tier: str, repeats: int, jax_mm, numpy_mm) -> dict:
+    spec = E2E[tier]
+    row = dict(spec)
+
+    def percycle(mm):
+        col, q, times = _e2e_pool(mm, spec, batch=1)
+        t0 = time.perf_counter()
+        claimed = sum(col.run_cycle(q, t, max_submit=t) for t in times)
+        return time.perf_counter() - t0, claimed, _claim_map(q)
+
+    def fused(mm):
+        col, q, times = _e2e_pool(mm, spec, batch=spec["waves"])
+        t0 = time.perf_counter()
+        claimed = sum(col.stage_cycle(q, t) for t in times)
+        claimed += col.quiesce()
+        return (time.perf_counter() - t0, claimed, _claim_map(q),
+                col.fused_batches, col.staged_fallbacks)
+
+    np_s, np_claimed, np_map = min(
+        (percycle(numpy_mm) for _ in range(repeats)), key=lambda r: r[0])
+    row["numpy_s"] = round(np_s, 4)
+    row["claimed"] = np_claimed
+    if jax_mm is None:
+        row.update(jax_s=None, fused_s=None, fused_ratio=None,
+                   e2e_identical=None, fused_batches=0)
+        return row
+    percycle(jax_mm)                                  # warmup: jit trace
+    fused(jax_mm)
+    jx_s, jx_claimed, jx_map = min(
+        (percycle(jax_mm) for _ in range(repeats)), key=lambda r: r[0])
+    fu_s, fu_claimed, fu_map, fb, ffb = min(
+        (fused(jax_mm) for _ in range(repeats)), key=lambda r: r[0])
+    row["jax_s"] = round(jx_s, 4)
+    row["fused_s"] = round(fu_s, 4)
+    row["fused_ratio"] = round(jx_s / fu_s, 2)
+    row["fused_batches"] = fb
+    row["staged_fallbacks"] = ffb
+    row["e2e_identical"] = bool(np_map == jx_map == fu_map
+                                and np_claimed == jx_claimed == fu_claimed)
+    return row
+
+
+def run(echo: bool = True, tiers=("10k", "100k"), repeats: int = 5,
+        e2e_tiers=("10k",), e2e_repeats: int = 3):
     ref = NumpyMatchmaker()
     jaxmm = make_matchmaker("jax") if HAVE_JAX else None
-    out = {"have_jax": HAVE_JAX, "tiers": {}}
+    out = {"have_jax": HAVE_JAX, "tiers": {}, "e2e": {}}
     with Timer() as total:
         for tier in tiers:
             spec = TIERS[tier]
@@ -100,6 +200,8 @@ def run(echo: bool = True, tiers=("10k", "100k"), repeats: int = 5):
                 row["identical"] = None
                 row["jax_s"] = row["ratio"] = None
             out["tiers"][tier] = row
+        for tier in e2e_tiers:
+            out["e2e"][tier] = run_e2e(tier, e2e_repeats, jaxmm, ref)
     out["wall_s"] = round(total.s, 2)
     emit("matchmaking", out, echo=echo)
     return out
@@ -115,20 +217,49 @@ def main(argv=None) -> int:
     ap.add_argument("--min-ratio", type=float, default=None,
                     help="fail if the jax/numpy speedup at the largest "
                          "requested tier is below this")
+    ap.add_argument("--e2e-tiers", default="10k",
+                    help="comma list from 10k,100k (empty disables e2e)")
+    ap.add_argument("--e2e-min-ratio", type=float, default=None,
+                    help="fail if the fused-batch speedup over per-cycle "
+                         "jax at the first e2e tier is below this")
     args = ap.parse_args(argv)
     tiers = [t.strip() for t in args.tiers.split(",") if t.strip()]
-    unknown = [t for t in tiers if t not in TIERS]
+    e2e_tiers = [t.strip() for t in args.e2e_tiers.split(",") if t.strip()]
+    unknown = ([t for t in tiers if t not in TIERS]
+               + [t for t in e2e_tiers if t not in E2E])
     if unknown:
-        print(f"[bench] unknown tiers {unknown}; known: {sorted(TIERS)}",
-              file=sys.stderr)
+        print(f"[bench] unknown tiers {unknown}; known: {sorted(TIERS)} "
+              f"(e2e: {sorted(E2E)})", file=sys.stderr)
         return 2
-    out = run(echo=True, tiers=tiers, repeats=args.repeats)
+    out = run(echo=True, tiers=tiers, repeats=args.repeats,
+              e2e_tiers=e2e_tiers)
     rc = 0
     for tier in tiers:
         row = out["tiers"][tier]
         if row["identical"] is False:
             print(f"[bench] FAIL: jax plan diverges from the reference "
                   f"at tier {tier}", file=sys.stderr)
+            rc = 1
+    for tier in e2e_tiers:
+        row = out["e2e"][tier]
+        if row["e2e_identical"] is False:
+            print(f"[bench] FAIL: e2e claim maps diverge across series "
+                  f"at tier {tier}", file=sys.stderr)
+            rc = 1
+    if args.e2e_min_ratio is not None and e2e_tiers:
+        top = out["e2e"][e2e_tiers[0]]
+        if top["fused_ratio"] is None:
+            print("[bench] FAIL: --e2e-min-ratio given but jax unavailable",
+                  file=sys.stderr)
+            rc = 1
+        elif top["fused_batches"] < 1:
+            print("[bench] FAIL: fused path never engaged "
+                  f"(fallbacks={top['staged_fallbacks']})", file=sys.stderr)
+            rc = 1
+        elif top["fused_ratio"] < args.e2e_min_ratio:
+            print(f"[bench] FAIL: fused speedup {top['fused_ratio']}x < "
+                  f"{args.e2e_min_ratio}x at e2e tier {e2e_tiers[0]}",
+                  file=sys.stderr)
             rc = 1
     top = out["tiers"][tiers[-1]]
     if args.min_ratio is not None:

@@ -112,8 +112,11 @@ class ProvisionerConfig:
     group_extra_keys: tuple[str, ...] = ("arch",)
     routing_policy: str = "fill-first"            # backend deficit split
     matchmaker: str = "numpy"                     # negotiation backend
-    #   ("numpy" reference | "jax" jitted | "scan" per-job oracle;
-    #    see core/matchmaker)
+    #   ("numpy" reference | "jax" jitted | "pallas" fused kernel |
+    #    "scan" per-job oracle; see core/matchmaker)
+    negotiation_batch: int = 1                    # staged cycles per fused
+    #   flush (1 = negotiate every cycle immediately; >1 batches K
+    #   consecutive cycles through the backend's fused multi-cycle jit)
 
     # [backend:<name>] sections (empty ⇒ single default backend)
     backends: tuple[BackendConfig, ...] = ()
@@ -163,6 +166,8 @@ def load_ini(text: str) -> ProvisionerConfig:
             cfg.group_extra_keys = _parse_list(sec["group_extra_keys_list"])
         cfg.routing_policy = sec.get("routing_policy", cfg.routing_policy)
         cfg.matchmaker = sec.get("matchmaker", cfg.matchmaker)
+        cfg.negotiation_batch = sec.getint(
+            "negotiation_batch", cfg.negotiation_batch)
 
     if "k8s" in cp:
         sec = cp["k8s"]
@@ -245,6 +250,7 @@ def dump_ini(cfg: ProvisionerConfig) -> str:
         f"group_extra_keys_list={','.join(cfg.group_extra_keys)}",
         f"routing_policy={cfg.routing_policy}",
         f"matchmaker={cfg.matchmaker}",
+        f"negotiation_batch={cfg.negotiation_batch}",
         "",
         "[k8s]",
         f"k8s_domain={cfg.k8s_domain}",

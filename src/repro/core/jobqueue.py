@@ -171,6 +171,10 @@ class JobQueue:
         self._complete_hooks: list[Callable[[Job], None]] = []
         self._claim_hooks: list[Callable[[Job, float], None]] = []
         self._release_hooks: list[Callable[[Job, float], None]] = []
+        # fn(job, +1|-1) on every IDLE entry/exit — the provisioner's
+        # incremental deficit counters live off these (O(changes)
+        # maintenance instead of a per-cycle recount)
+        self._idle_hooks: list[Callable[[Job, int], None]] = []
         # per-user running-job counts (fair-share metrics read these;
         # the accountant tracks core RATES itself via the hooks)
         self.running_by_user: dict[str, int] = {}
@@ -179,6 +183,10 @@ class JobQueue:
         # unclaimed worker is a pure function of this set, so workers
         # cache it per version (worker.py any_cohort_matches)
         self.idle_version = 0
+        # bumped on EVERY job entering or leaving IDLE — the fine-grained
+        # companion of idle_version (which only moves on cohort births/
+        # drains): "has the idle set changed at all?" is one int compare
+        self.idle_seq = 0
         # indexes: per-state buckets + idle cohorts (jid -> Job each)
         self._by_state: dict[JobState, dict[int, Job]] = {
             s: {} for s in JobState
@@ -216,6 +224,9 @@ class JobQueue:
                 self._cohort_unsorted.add(key)
             if tail is None or order > tail:
                 self._cohort_tail[key] = order
+            self.idle_seq += 1
+            for hook in self._idle_hooks:
+                hook(job, +1)
 
     def _leave_state(self, job: Job):
         self._by_state[job.state].pop(job.jid, None)
@@ -230,6 +241,9 @@ class JobQueue:
                     self._cohort_tail.pop(key, None)
                     self._cohort_unsorted.discard(key)
                     self.idle_version += 1
+            self.idle_seq += 1
+            for hook in self._idle_hooks:
+                hook(job, -1)
 
     def submit(self, job: Job, now: float = 0.0) -> int:
         job.jid = next(self._ids)
@@ -253,6 +267,17 @@ class JobQueue:
         """(cohort_key, {jid: job}) for every non-empty idle cohort.
         Every job in a cohort matches exactly the same workers."""
         return iter(list(self._idle_cohorts.items()))
+
+    def cohort_rep(self, key: tuple) -> Job | None:
+        """One representative member of an idle cohort (all members
+        carry matchmaking-identical ads), or None if the cohort is not
+        currently idle.  O(1) — consumers holding bare cohort keys (the
+        provisioner mapping preview absorption onto group signatures)
+        must not pay a cohort scan per lookup."""
+        cohort = self._idle_cohorts.get(key)
+        if not cohort:
+            return None
+        return next(iter(cohort.values()))
 
     def cohort_first_submit(self, key: tuple) -> tuple:
         """Earliest (submitted_at, jid) a cohort has held while idle —
@@ -325,6 +350,13 @@ class JobQueue:
         """Observe every RUNNING -> IDLE release (preemption / worker
         death) — the accounting mirror of the claim hook."""
         self._release_hooks.append(fn)
+
+    def add_idle_hook(self, fn: Callable[[Job, int], None]):
+        """Observe every idle-set mutation as `fn(job, +1|-1)` — +1 when
+        a job enters IDLE (submit, release), -1 when it leaves (claim,
+        complete, remove).  NOT replayed by `load_state`; counter-style
+        consumers must rebuild from `idle_jobs()` after a restore."""
+        self._idle_hooks.append(fn)
 
     def complete(self, jid: int, now: float):
         job = self._jobs.pop(jid)
@@ -409,6 +441,7 @@ class JobQueue:
             "draining": self.draining,
             "keep_completed": self.keep_completed,
             "idle_version": self.idle_version,
+            "idle_seq": self.idle_seq,
             "jobs": [job_state(j) for j in self._jobs.values()],
             "by_state": {
                 s.value: list(self._by_state[s].keys())
@@ -448,6 +481,7 @@ class JobQueue:
             if meta.get("unsorted"):
                 self._cohort_unsorted.add(key)
         self.idle_version = int(state.get("idle_version", 0))
+        self.idle_seq = int(state.get("idle_seq", 0))
         self.completed_log = [job_from_state(s, schedd=self)
                               for s in state.get("completed", [])]
         self.running_by_user = {}
@@ -511,6 +545,10 @@ class FlockedQueues:
         # any queue's idle-cohort SET changes — the property the
         # collector's C2 poll cache keys on
         return sum(q.idle_version for q in self.queues)
+
+    @property
+    def idle_seq(self) -> int:
+        return sum(q.idle_seq for q in self.queues)
 
     def idle_cohorts(self) -> Iterator[tuple[tuple, dict[int, Job]]]:
         for q in self.queues:

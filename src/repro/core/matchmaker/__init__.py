@@ -1,7 +1,7 @@
 """Swappable matchmaking backends behind one protocol (see base.py).
 
     from repro.core.matchmaker import make_matchmaker
-    mm = make_matchmaker("jax")          # or "numpy" (reference), "scan"
+    mm = make_matchmaker("jax")          # or "numpy", "scan", "pallas"
     plan = mm.match(problem)
 
 Selection flows from `Simulation(matchmaker=...)` / the `[provision]
@@ -17,14 +17,17 @@ from repro.core.matchmaker.base import (
 from repro.core.matchmaker.numpy_backend import NumpyMatchmaker
 from repro.core.matchmaker.scan_backend import ScanMatchmaker
 from repro.core.matchmaker.jax_backend import HAVE_JAX, JaxMatchmaker
+from repro.core.matchmaker.pallas_backend import HAVE_PALLAS, PallasMatchmaker
 
 register_matchmaker("numpy", NumpyMatchmaker)
 register_matchmaker("scan", ScanMatchmaker)
 register_matchmaker("jax", JaxMatchmaker)
+register_matchmaker("pallas", PallasMatchmaker)
 
 __all__ = [
-    "EXHAUSTIBLE_IDX", "FIT_EPS", "HAVE_JAX", "RESOURCE_KEYS",
-    "JaxMatchmaker", "MatchPlan", "MatchProblem", "Matchmaker",
-    "NumpyMatchmaker", "ScanMatchmaker", "cohort_fits", "make_matchmaker",
-    "matchmaker_names", "register_matchmaker",
+    "EXHAUSTIBLE_IDX", "FIT_EPS", "HAVE_JAX", "HAVE_PALLAS",
+    "RESOURCE_KEYS", "JaxMatchmaker", "MatchPlan", "MatchProblem",
+    "Matchmaker", "NumpyMatchmaker", "PallasMatchmaker", "ScanMatchmaker",
+    "cohort_fits", "make_matchmaker", "matchmaker_names",
+    "register_matchmaker",
 ]

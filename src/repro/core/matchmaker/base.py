@@ -91,6 +91,25 @@ class MatchPlan:
         return self.takes.sum(axis=1)
 
 
+@dataclasses.dataclass
+class CycleDelta:
+    """Host-staged state change applied BEFORE one fused negotiation
+    cycle: demand that arrived since the previous cycle, capacity that
+    was returned (completions), and the cycle's claim budget.
+
+    `match_cycles` semantics (every backend, and the shared
+    `sequential_match_cycles` reference): starting from the problem's
+    demand/free, for each delta in order apply ``demand += arrivals``
+    and ``free += free_add``, solve one plain cycle (no ``active``
+    mask — fair-share slices stay on the per-cycle path), then carry
+    ``demand -= plan.per_cohort()`` and ``free = plan.free_after`` into
+    the next cycle.  K cycles, K plans, bit-identical to K sequential
+    `match` calls with the same deltas applied host-side."""
+    arrivals: np.ndarray            # (C,) int64 — demand added
+    free_add: np.ndarray | None = None   # (W, R) float64 — capacity back
+    budget: int | None = None       # per-cycle claim cap
+
+
 @runtime_checkable
 class Matchmaker(Protocol):
     """Anything with a ``name`` and a pure ``match``; see the module
@@ -103,6 +122,37 @@ class Matchmaker(Protocol):
               active: np.ndarray | None = None) -> MatchPlan:
         """Solve one matchmaking pass.  Must NOT mutate the problem."""
         ...
+
+
+def sequential_match_cycles(mm: "Matchmaker", problem: MatchProblem,
+                            deltas: list[CycleDelta]) -> list[MatchPlan]:
+    """The K-cycle reference semantics: K independent `match` calls with
+    the deltas applied host-side between them.  Backends without a fused
+    `match_cycles` route here; the fused jax path must be bit-identical
+    to this loop (tests/test_fused_negotiation.py pins it)."""
+    demand = np.asarray(problem.demand, dtype=np.int64).copy()
+    free = np.array(problem.free, dtype=np.float64, copy=True)
+    plans: list[MatchPlan] = []
+    for d in deltas:
+        demand = demand + np.asarray(d.arrivals, dtype=np.int64)
+        if d.free_add is not None:
+            free = free + d.free_add
+        sub = dataclasses.replace(problem, demand=demand, free=free)
+        plan = mm.match(sub, budget=d.budget)
+        demand = demand - plan.per_cohort()
+        free = plan.free_after
+        plans.append(plan)
+    return plans
+
+
+def match_cycles(mm: "Matchmaker", problem: MatchProblem,
+                 deltas: list[CycleDelta]) -> list[MatchPlan]:
+    """Dispatch K consecutive cycles to the backend's fused
+    implementation when it has one, else the sequential reference."""
+    fused = getattr(mm, "match_cycles", None)
+    if fused is not None:
+        return fused(problem, deltas)
+    return sequential_match_cycles(mm, problem, deltas)
 
 
 def cohort_fits(free: np.ndarray, want: np.ndarray,

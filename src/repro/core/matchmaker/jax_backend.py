@@ -38,7 +38,7 @@ from functools import partial
 import numpy as np
 
 from repro.core.matchmaker.base import (
-    FIT_EPS, MatchPlan, MatchProblem,
+    FIT_EPS, CycleDelta, MatchPlan, MatchProblem,
 )
 
 try:                                    # gate: jax is an optional dep
@@ -55,9 +55,10 @@ _ZERO_WANT_BIG = 1e15     # ratio offset for zero-request resource lanes
 _W_LANES = 128            # worker-axis padding bucket
 
 
-def _build_scan(chunk: int, unroll: int):
-    """The jitted chunked water-fill (built once per config, shape-
-    polymorphic thereafter — XLA caches one executable per bucket)."""
+def _make_steps(unroll: int):
+    """The shared inner/chunk scan bodies — the single-cycle jit and the
+    fused multi-cycle jit run EXACTLY these ops, so their plans agree
+    bit-for-bit."""
 
     def inner_step(carry, x):
         freeT, left = carry
@@ -108,6 +109,14 @@ def _build_scan(chunk: int, unroll: int):
 
         return lax.cond(alive, run, skip, (freeT, left))
 
+    return inner_step, chunk_step
+
+
+def _build_scan(chunk: int, unroll: int):
+    """The jitted chunked water-fill (built once per config, shape-
+    polymorphic thereafter — XLA caches one executable per bucket)."""
+    _inner, chunk_step = _make_steps(unroll)
+
     def fn(freeT, left, want_s, safe_s, big_s, d_s, crow_s, chunk_min):
         (freeT, left), (takes, ran) = lax.scan(
             chunk_step, (freeT, left),
@@ -118,6 +127,56 @@ def _build_scan(chunk: int, unroll: int):
         return takes, freeT, ran
 
     return jax.jit(fn, donate_argnums=(0,))
+
+
+def _build_cycles_scan(chunk: int, unroll: int):
+    """The fused multi-cycle jit: an outer `lax.scan` over K negotiation
+    cycles wrapping the same chunked water-fill, so the free matrix and
+    the carried demand stay DEVICE-RESIDENT across cycles — one dispatch
+    and one host round-trip per K-cycle batch instead of per cycle.
+
+    Per cycle the carry applies the staged deltas on device (``demand +=
+    arrivals``, ``freeT += free_add``), re-derives the drain guard's
+    per-chunk componentwise-minimum request from the LIVE demand (the
+    single-cycle path computes it on the host; here demand changes
+    across cycles, so the guard must be recomputed per cycle with the
+    identical arithmetic to stay claim-exact), resets the claim budget,
+    and runs the inner chunk scan unchanged — the emitted takes are
+    bit-identical to K sequential single-cycle matches."""
+    _inner, chunk_step = _make_steps(unroll)
+
+    def cycle_step(carry, x):
+        freeT, d_s = carry              # d_s: (nch, chunk) live demand
+        arr, fadd, left, want_s, safe_s, big_s, crow_s = x
+        d_s = d_s + arr
+        freeT = freeT + fadd
+        # drain-guard lower bound over the cycle's still-demanding
+        # cohorts — same where/min arithmetic as the host precompute
+        minreq = jnp.min(
+            jnp.where((d_s > 0)[..., None], want_s, jnp.inf), axis=1)
+        (freeT, _left), (takes, ran) = lax.scan(
+            chunk_step, (freeT, left),
+            (want_s, safe_s, big_s, d_s, crow_s, minreq))
+        d_s = d_s - jnp.sum(takes, axis=2).astype(d_s.dtype)
+        return (freeT, d_s), (takes, ran, freeT)
+
+    def fn(freeT, d_s, arrivals, free_addT, budgets,
+           want_s, safe_s, big_s, crow_s):
+        # deltas scan over cycles; the per-chunk tensors are loop
+        # constants (closed over via broadcast in xs would copy K-fold)
+        def step(carry, x):
+            arr, fadd, left = x
+            return cycle_step(carry, (arr, fadd, left,
+                                      want_s, safe_s, big_s, crow_s))
+
+        (freeT, d_s), ys = lax.scan(
+            step, (freeT, d_s), (arrivals, free_addT, budgets))
+        takes, ran, free_per = ys
+        return takes, ran, free_per
+
+    # no buffer donation here: the per-cycle freeT snapshots are emitted
+    # as scan ys, so the input buffers stay live for the whole dispatch
+    return jax.jit(fn)
 
 
 class JaxMatchmaker:
@@ -137,17 +196,16 @@ class JaxMatchmaker:
         self.chunk = int(chunk)
         self.unroll = int(unroll)
         self._fn = _build_scan(self.chunk, self.unroll)
+        self._fn_cycles = _build_cycles_scan(self.chunk, self.unroll)
 
-    def match(self, p: MatchProblem, *, budget: int | None = None,
-              active: np.ndarray | None = None) -> MatchPlan:
+    def _prep(self, p: MatchProblem, active=None):
+        """Order-permuted, padded host arrays (pad cohorts have demand 0
+        and pad workers have zero free capacity — both take nothing)."""
         C, W = p.compat.shape
         R = p.requests.shape[1]
         chunk = self.chunk
         Cp = max(chunk, ((C + chunk - 1) // chunk) * chunk)
         Wp = max(_W_LANES, ((W + _W_LANES - 1) // _W_LANES) * _W_LANES)
-
-        # order-permuted, padded host arrays (pad cohorts have demand 0
-        # and pad workers have zero free capacity — both take nothing)
         order = np.concatenate(
             [np.asarray(p.order, dtype=np.int64),
              np.arange(C, Cp, dtype=np.int64)])
@@ -164,6 +222,15 @@ class JaxMatchmaker:
         pos = req_o > 0
         safe = np.where(pos, req_o, 1.0)
         big = np.where(pos, 0.0, _ZERO_WANT_BIG)
+        return order, req_o, d_o, crow_o, freeT, safe, big, Cp, Wp
+
+    def match(self, p: MatchProblem, *, budget: int | None = None,
+              active: np.ndarray | None = None) -> MatchPlan:
+        C, W = p.compat.shape
+        R = p.requests.shape[1]
+        chunk = self.chunk
+        (order, req_o, d_o, crow_o, freeT, safe, big,
+         Cp, Wp) = self._prep(p, active)
         # per-chunk componentwise-min request among demanding cohorts
         # (the drain guard's lower bound; inf where a chunk is empty)
         req_live = np.where((d_o > 0)[:, None], req_o, np.inf)
@@ -195,6 +262,74 @@ class JaxMatchmaker:
         takes[order[live]] = takes_flat[live, :W]
         return MatchPlan(takes=takes[:C],
                          free_after=freeT_j[:, :W].T.copy())
+
+    def match_cycles(self, p: MatchProblem,
+                     deltas: list[CycleDelta]) -> list[MatchPlan]:
+        """K fused negotiation cycles in ONE device dispatch — see
+        `base.sequential_match_cycles` for the reference semantics this
+        must (and does, bit-for-bit) reproduce.  The free matrix and the
+        live demand never leave the device between cycles; only the
+        staged deltas ship down and only the K plans ship back."""
+        if not deltas:
+            return []
+        C, W = p.compat.shape
+        R = p.requests.shape[1]
+        chunk = self.chunk
+        (order, req_o, d_o, crow_o, freeT, safe, big,
+         Cp, Wp) = self._prep(p)
+        nch = Cp // chunk
+        K = len(deltas)
+
+        arrivals = np.zeros((K, Cp))
+        free_addT = np.zeros((K, R, Wp))
+        budgets = np.empty(K)
+        for k, d in enumerate(deltas):
+            arrivals[k, :C] = np.asarray(d.arrivals, dtype=np.float64)[
+                order[:C]]
+            if d.free_add is not None:
+                free_addT[k, :, :W] = np.asarray(d.free_add).T
+            budgets[k] = math.inf if d.budget is None else float(d.budget)
+
+        if self.dtype == "float64":
+            with enable_x64():
+                takes_j, ran_j, free_per = self._run_cycles(
+                    jnp.float64, freeT, d_o, arrivals, free_addT,
+                    budgets, req_o, safe, big, crow_o, nch, chunk, R, Wp)
+                takes_j = np.asarray(takes_j)
+                ran = np.asarray(ran_j)
+                free_per = np.asarray(free_per)
+        else:
+            takes_j, ran_j, free_per = self._run_cycles(
+                jnp.float32, freeT, d_o, arrivals, free_addT,
+                budgets, req_o, safe, big, crow_o, nch, chunk, R, Wp)
+            takes_j = np.asarray(takes_j)
+            ran = np.asarray(ran_j)
+            free_per = np.asarray(free_per, dtype=np.float64)
+
+        plans: list[MatchPlan] = []
+        for k in range(K):
+            takes_flat = takes_j[k].reshape(Cp, Wp)
+            takes = np.zeros((Cp, W), dtype=np.int64)
+            live = np.nonzero(np.repeat(ran[k], chunk))[0]
+            takes[order[live]] = takes_flat[live, :W]
+            plans.append(MatchPlan(takes=takes[:C],
+                                   free_after=free_per[k][:, :W].T.copy()))
+        return plans
+
+    def _run_cycles(self, dt, freeT, d_o, arrivals, free_addT, budgets,
+                    req_o, safe, big, crow_o, nch, chunk, R, Wp):
+        K = arrivals.shape[0]
+        return self._fn_cycles(
+            jnp.asarray(freeT, dtype=dt),
+            jnp.asarray(d_o.reshape(nch, chunk), dtype=dt),
+            jnp.asarray(arrivals.reshape(K, nch, chunk), dtype=dt),
+            jnp.asarray(free_addT, dtype=dt),
+            jnp.asarray(budgets, dtype=dt),
+            jnp.asarray(req_o.reshape(nch, chunk, R), dtype=dt),
+            jnp.asarray(safe.reshape(nch, chunk, R), dtype=dt),
+            jnp.asarray(big.reshape(nch, chunk, R), dtype=dt),
+            jnp.asarray(crow_o.reshape(nch, chunk, Wp)),   # uint8 mask
+        )
 
     def _run(self, dt, freeT, left, req_o, safe, big, d_o, crow_o,
              chunk_min, nch, chunk, R, Wp):

@@ -1,0 +1,56 @@
+"""Pallas matchmaker: the single-cycle water-fill as a fused TPU kernel.
+
+`make_matchmaker("pallas")` — identical host-side plumbing to the jax
+backend (same `_prep` padding/ordering, same scatter-back), but the
+chunked claim loop runs as ONE Pallas program with the free matrix
+resident in VMEM across every chunk (src/repro/kernels/waterfill/).
+Off-TPU the kernel runs in interpret mode, so plans stay bit-identical
+to the jax and numpy backends in float64 and CI can pin the parity
+without hardware.
+
+Multi-cycle fusion (`match_cycles`) is inherited from the jax backend:
+the K-cycle batch is an outer lax.scan around the identical chunk
+arithmetic, so a pallas-selected pool still gets device-resident fused
+batches — the kernel covers the steady-state per-cycle path, which
+dominates the paper's demand >> supply negotiation profile.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.matchmaker.jax_backend import HAVE_JAX, JaxMatchmaker
+
+try:                                    # gate: pallas rides on jax
+    from repro.kernels.waterfill import waterfill
+    HAVE_PALLAS = HAVE_JAX
+except ImportError:                     # pragma: no cover
+    waterfill = None
+    HAVE_PALLAS = False
+
+
+class PallasMatchmaker(JaxMatchmaker):
+    """The Pallas water-fill backend (`make_matchmaker("pallas")`)."""
+
+    name = "pallas"
+
+    def __init__(self, *, dtype: str = "float64", chunk: int = 64,
+                 unroll: int = 4, interpret: bool | None = None):
+        if not HAVE_PALLAS:
+            raise ImportError(
+                "matchmaker='pallas' needs jax with pallas support; "
+                "use matchmaker='jax' or 'numpy'")
+        super().__init__(dtype=dtype, chunk=chunk, unroll=unroll)
+        self.interpret = interpret
+
+    def _run(self, dt, freeT, left, req_o, safe, big, d_o, crow_o,
+             chunk_min, nch, chunk, R, Wp):
+        return waterfill(
+            freeT, float(left),
+            np.ascontiguousarray(req_o.reshape(nch, chunk, R)),
+            np.ascontiguousarray(safe.reshape(nch, chunk, R)),
+            np.ascontiguousarray(big.reshape(nch, chunk, R)),
+            d_o.reshape(nch, chunk),
+            np.ascontiguousarray(crow_o.reshape(nch, chunk, Wp)),
+            chunk_min,
+            dtype=dt, interpret=self.interpret,
+        )

@@ -87,6 +87,7 @@ class Provisioner:
         cancel_stale_pending_s: float | None = None,
         worker_factory: Callable[..., Worker] | None = None,
         schedd_quotas: dict[str, float] | None = None,
+        debug_exact_deficits: bool = False,
     ):
         self.cfg = cfg
         # one schedd or a flocking-ordered list of them (compat adapter,
@@ -128,6 +129,25 @@ class Provisioner:
         self._preview_cache: tuple[tuple, list[dict]] | None = None
         self.preview_hits = 0
         self.preview_misses = 0
+        # worker free-matrix digest reuse (Worker.free_rev dirty flag):
+        # an unclaimed-pool poll costs an int compare per worker, not a
+        # vector rebuild + serialization
+        self.digest_hits = 0
+        self.digest_misses = 0
+        # incremental deficit counters: filtered PRE-preview idle demand
+        # per (group signature, schedd), maintained in O(changes) by the
+        # queues' idle hooks instead of recounted per reconcile.  Stale
+        # until first use and after queue attach/detach or load_state
+        # (restores bypass hooks) — then rebuilt once from live cohorts.
+        self._inc_counts: dict[GroupSignature, dict[str, int]] = {}
+        self._counts_stale = True
+        self._idle_hook_of: dict[int, Callable] = {}   # id(queue) -> fn
+        for q in self.queues:
+            self._register_idle_hook(q)
+        #: differential oracle: re-derive deficits with the retired
+        #: per-cycle scan on every reconcile and assert equality (debug
+        #: flag; the flocking differential suite runs with it on)
+        self.debug_exact_deficits = debug_exact_deficits
 
     @property
     def cluster(self) -> KubeCluster:
@@ -186,7 +206,15 @@ class Provisioner:
         workers = []
         for w in self.collector.workers.values():
             if w.ready(now) and not w.draining:
-                workers.append((w.name, w.free_vec().tobytes()))
+                # the digest is cached on the worker's claim-set
+                # revision (free_rev dirty flag): an unchanged worker
+                # costs an int compare, not a vector rebuild + hash
+                cached = w._free_digest
+                if cached is not None and cached[0] == w.free_rev:
+                    self.digest_hits += 1
+                else:
+                    self.digest_misses += 1
+                workers.append((w.name, w.free_digest()))
         key = (
             tuple((q.idle_version, q.n_idle()) for q in self.queues),
             tuple(workers),
@@ -200,24 +228,89 @@ class Provisioner:
         self._preview_cache = (key, previews)
         return previews
 
+    # -- incremental deficit counters (idle hooks) ---------------------------
+    def _register_idle_hook(self, q) -> None:
+        if not hasattr(q, "add_idle_hook") or id(q) in self._idle_hook_of:
+            return
+        name = getattr(q, "name", None) or "schedd"
+
+        def on_idle(job, delta: int, *, _name=name):
+            if self._counts_stale:
+                return          # a full rebuild is already scheduled
+            key = job.cohort_key
+            if not self._cohort_ok(key, job):
+                return
+            sig = self._cohort_signature(key, job)
+            per = self._inc_counts.setdefault(sig, {})
+            n = per.get(_name, 0) + delta
+            if n:
+                per[_name] = n
+            else:
+                per.pop(_name, None)
+                if not per:
+                    self._inc_counts.pop(sig, None)
+
+        q.add_idle_hook(on_idle)
+        self._idle_hook_of[id(q)] = on_idle
+
+    def attach_queue(self, q) -> None:
+        """Add a schedd queue to the federation at runtime: joins the
+        deficit attribution LAST (flocking order) and gets an idle hook
+        so the incremental counters keep tracking it."""
+        if q not in self.queues:
+            self.queues.append(q)
+        self._register_idle_hook(q)
+        self._counts_stale = True
+
+    def detach_queue(self, q) -> None:
+        """Remove a (drained) schedd queue: unhook it so later activity
+        on the detached queue cannot leak into the counters."""
+        self.queues.remove(q)
+        self.queue = self.queues[0]
+        fn = self._idle_hook_of.pop(id(q), None)
+        if fn is not None and hasattr(q, "_idle_hooks"):
+            q._idle_hooks.remove(fn)
+        self._counts_stale = True
+
+    def _rebuild_idle_counts(self) -> None:
+        """One full recount of the filtered idle demand — only after
+        construction, queue attach/detach, or a state restore (all of
+        which bypass the hooks).  Every reconcile in between maintains
+        the counters in O(idle-set changes)."""
+        self._inc_counts = {}
+        for qi, q in enumerate(self.queues):
+            if not hasattr(q, "idle_cohorts"):
+                continue
+            name = self._schedd_name(qi)
+            for key, jobs in q.idle_cohorts():
+                if not jobs:
+                    continue
+                rep = next(iter(jobs.values()))
+                if not self._cohort_ok(key, rep):
+                    continue
+                sig = self._cohort_signature(key, rep)
+                per = self._inc_counts.setdefault(sig, {})
+                per[name] = per.get(name, 0) + len(jobs)
+        self._counts_stale = False
+
     def _idle_group_counts(self, now: float) -> tuple[
             dict[GroupSignature, int], dict[GroupSignature, dict], bool]:
         """Filtered POST-NEGOTIATION idle demand per requirement
         signature (C3 + C4), attributed per schedd.
 
-        Iterates each queue's idle COHORTS (one ClassAd filter
-        evaluation and one signature derivation per distinct ad — a
-        100k-job uniform campaign costs two dict lookups, not 200k
-        expression evals) and subtracts what `Collector.preview`
-        says the next negotiation cycle will absorb with capacity that
-        already exists.  Returns ``(counts, by_schedd, legacy)`` where
-        `legacy` flags the foreign-queue fallback (pre-negotiation
-        counts; the caller must subtract unclaimed workers as the seed
-        did)."""
-        counts: dict[GroupSignature, int] = {}
-        by_schedd: dict[GroupSignature, dict] = {}
+        The pre-negotiation counts come from the incremental hook-fed
+        counters (`_inc_counts` — O(changes) maintenance, not a recount;
+        one ClassAd filter evaluation and one signature derivation per
+        distinct ad ever).  What `Collector.preview` says the next
+        negotiation cycle will absorb with capacity that already exists
+        is then subtracted cohort-by-cohort, leaving post-negotiation
+        demand.  Returns ``(counts, by_schedd, legacy)`` where `legacy`
+        flags the foreign-queue fallback (pre-negotiation counts; the
+        caller must subtract unclaimed workers as the seed did)."""
         if not all(hasattr(q, "idle_cohorts") for q in self.queues):
             # foreign queue exposing only the seed surface
+            counts: dict[GroupSignature, int] = {}
+            by_schedd: dict[GroupSignature, dict] = {}
             for qi, q in enumerate(self.queues):
                 name = self._schedd_name(qi)
                 idle = [j for j in q.idle_jobs()
@@ -227,7 +320,55 @@ class Provisioner:
                     per = by_schedd.setdefault(sig, {})
                     per[name] = per.get(name, 0) + len(jobs)
             return counts, by_schedd, True
+        if self._counts_stale:
+            self._rebuild_idle_counts()
         previews = self._preview_cached(now)
+        counts = {}
+        by_schedd = {}
+        for sig, per in self._inc_counts.items():
+            n = sum(per.values())
+            if n > 0:
+                counts[sig] = n
+                by_schedd[sig] = dict(per)
+        # subtract preview absorption: map each absorbed cohort back to
+        # its signature (memoized; cohorts absorbed is bounded by free
+        # capacity, not queue depth)
+        for qi, q in enumerate(self.queues):
+            name = self._schedd_name(qi)
+            for key, n_abs in previews[qi].items():
+                rep = q.cohort_rep(key)
+                if rep is None or not self._cohort_ok(key, rep):
+                    continue
+                sig = self._cohort_signature(key, rep)
+                per = by_schedd.get(sig)
+                if per is None:
+                    continue
+                take = min(int(n_abs), per.get(name, 0))
+                if take <= 0:
+                    continue
+                per[name] -= take
+                counts[sig] -= take
+                if per[name] <= 0:
+                    per.pop(name, None)
+                if counts[sig] <= 0:
+                    counts.pop(sig, None)
+                    by_schedd.pop(sig, None)
+        if self.debug_exact_deficits:
+            oracle = self._idle_group_counts_scan(previews)
+            assert (counts, by_schedd) == oracle, (
+                "incremental deficits diverged from the dry-run oracle:"
+                f"\n incremental: {(counts, by_schedd)}"
+                f"\n oracle:      {oracle}")
+        return counts, by_schedd, False
+
+    def _idle_group_counts_scan(self, previews: list[dict]) -> tuple[
+            dict[GroupSignature, int], dict[GroupSignature, dict]]:
+        """The retired per-reconcile recount, kept verbatim as the
+        differential oracle for the incremental counters
+        (`debug_exact_deficits`; the flocking differential suite runs
+        with it on)."""
+        counts: dict[GroupSignature, int] = {}
+        by_schedd: dict[GroupSignature, dict] = {}
         for qi, q in enumerate(self.queues):
             absorbed = previews[qi]
             name = self._schedd_name(qi)
@@ -244,7 +385,7 @@ class Provisioner:
                 counts[sig] = counts.get(sig, 0) + n
                 per = by_schedd.setdefault(sig, {})
                 per[name] = per.get(name, 0) + n
-        return counts, by_schedd, False
+        return counts, by_schedd
 
     def _owed_weight(self, n: int, per_schedd: dict) -> float:
         """Demand weighted by owed share: each schedd's contribution
@@ -423,6 +564,9 @@ class Provisioner:
         self._preview_cache = None
         self._cohort_filter.clear()
         self._cohort_sig.clear()
+        # restores rebuild the queues WITHOUT firing idle hooks — the
+        # incremental counters must recount from the restored cohorts
+        self._counts_stale = True
 
     def _submit_pod(self, sig: GroupSignature, label: str, now: float,
                     backend=None):

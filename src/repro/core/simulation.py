@@ -110,6 +110,7 @@ class Simulation:
         fairshare: Accountant | bool | None = None,
         negotiate_quantum: int = 1,
         matchmaker=None,
+        negotiation_batch: int | None = None,
     ):
         if engine not in ("event", "tick"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -160,7 +161,17 @@ class Simulation:
         # reference, "jax" jitted, "scan" oracle, or an instance)
         if matchmaker is None:
             matchmaker = getattr(cfg, "matchmaker", None)
-        self.collector = Collector(matchmaker=matchmaker)
+        # staged-negotiation capacity: the explicit arg wins, else the
+        # INI `[provision] negotiation_batch=` key.  The LIVE engines
+        # quiesce every staged cycle immediately (claims feed worker
+        # advancement between events, so deferral would break causality)
+        # — batch>1 pays off for drivers that legitimately batch, e.g.
+        # the streaming service flushing an arrival backlog or the e2e
+        # bench (benchmarks/bench_matchmaking.py)
+        if negotiation_batch is None:
+            negotiation_batch = getattr(cfg, "negotiation_batch", 1)
+        self.collector = Collector(matchmaker=matchmaker,
+                                   negotiation_batch=negotiation_batch)
         if backends is None:
             # single-backend compatibility adapter (seed signature)
             cluster = KubeCluster(nodes or [])
@@ -277,6 +288,15 @@ class Simulation:
             self.collector.run_cycle(
                 self.queues, now, accountant=self.accountant,
                 quantum=self.negotiate_quantum)
+        elif self.collector.negotiation_batch > 1:
+            # live engine: stage, then quiesce in the SAME instant —
+            # events between negotiation times observe claims (worker
+            # advancement, C2 idle clocks), so cycles cannot actually
+            # defer here; the staging path still runs end-to-end and
+            # batch-capable drivers (service backlog flush, e2e bench)
+            # get real K>1 fusion by staging without the quiesce
+            self.collector.stage_cycle(self.queue, now)
+            self.collector.quiesce()
         else:
             self.collector.run_cycle(self.queue, now)
 
@@ -380,6 +400,7 @@ class Simulation:
         cancels its timers.  Event engine only."""
         if self.engine != "event":
             raise ValueError("drain_backend requires engine='event'")
+        self.collector.quiesce()    # staged cycles see the pre-drain pool
         b = self.provisioner.backend(name)      # KeyError on unknown
         b.draining = True
         now = self.loop.now
@@ -421,6 +442,7 @@ class Simulation:
         alive-time start at attach, not at the epoch."""
         if self.engine != "event":
             raise ValueError("add_backend requires engine='event'")
+        self.collector.quiesce()
         taken = ({b.name for b in self.backends}
                  | {b.name for b in self.detached_backends})
         if backend.name in taken:
@@ -444,10 +466,11 @@ class Simulation:
                 "(construct with schedds=... or fairshare=...)")
         if any(q.name == name for q in self.queues):
             raise ValueError(f"schedd {name!r} already exists")
+        self.collector.quiesce()    # flocking order changes below
         q = JobQueue(name=name, ids=self.queues[0]._ids)
         self.queues.append(q)
         self.pool_queue.queues.append(q)
-        self.provisioner.queues.append(q)
+        self.provisioner.attach_queue(q)
         self.provisioner.schedd_quotas[name] = quota
         if self.accountant is not None:
             self.accountant.set_quota(name, quota)
@@ -459,6 +482,7 @@ class Simulation:
         """Stop accepting submissions on one schedd; its queued and
         running jobs keep negotiating and complete normally.  Call
         `detach_schedd` once it has fully drained."""
+        self.collector.quiesce()
         self.queue_named(name).draining = True
 
     def detach_schedd(self, name: str):
@@ -471,9 +495,10 @@ class Simulation:
             raise ValueError(f"schedd {name!r} still has jobs")
         if len(self.queues) == 1:
             raise ValueError("cannot detach the last schedd")
+        self.collector.quiesce()
         self.queues.remove(q)
         self.pool_queue.queues.remove(q)
-        self.provisioner.queues.remove(q)
+        self.provisioner.detach_queue(q)
         self.provisioner.schedd_quotas.pop(name, None)
         self.schedd_specs = [s for s in self.schedd_specs
                              if s.name != name]
@@ -502,6 +527,7 @@ class Simulation:
         restore().  Straggler-policy internal memory is not carried."""
         if self.engine != "event":
             raise ValueError("state_dict requires engine='event'")
+        self.collector.quiesce()    # staged cycles are not serializable
         if self._external_pending > 0 and not allow_pending_external:
             raise ValueError(
                 f"{self._external_pending} external event(s) still "

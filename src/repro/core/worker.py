@@ -53,6 +53,7 @@ cycle will match anyway.  `negotiate`, `negotiate_scan`, and
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import itertools
 import warnings
@@ -69,6 +70,7 @@ from repro.core.jobqueue import (
 from repro.core.matchmaker import (
     MatchPlan, MatchProblem, Matchmaker, cohort_fits, make_matchmaker,
 )
+from repro.core.matchmaker.base import CycleDelta, match_cycles
 from repro.core.matchmaker.base import RESOURCE_KEYS  # noqa: F401
 #   (re-exported: RESOURCE_KEYS moved to matchmaker.base with the
 #   protocol split; long-standing importers keep working)
@@ -169,6 +171,13 @@ class Worker:
                                       compare=False)
     _used_vec: Any = dataclasses.field(default=None, repr=False,
                                        compare=False)
+    #: claim-set revision — bumped on every add/drop/clear, so "has this
+    #: worker's free capacity changed?" is an int compare instead of a
+    #: vector rebuild + hash (provisioner preview memo, collector
+    #: staging fingerprint)
+    free_rev: int = dataclasses.field(default=0, repr=False, compare=False)
+    _free_digest: Any = dataclasses.field(default=None, repr=False,
+                                          compare=False)
 
     def ready(self, now: float) -> bool:
         return self.booted_at >= 0 and now >= self.booted_at and not self.terminated
@@ -191,16 +200,31 @@ class Worker:
         if self._used_vec is None:
             self._used_vec = np.zeros(len(RESOURCE_KEYS), dtype=np.float64)
         self._used_vec += _job_req_vec(job)
+        self.free_rev += 1
 
     def drop_claim(self, jid: int) -> Job | None:
         job = self.claimed.pop(jid, None)
         if job is not None and self._used_vec is not None:
             self._used_vec -= _job_req_vec(job)
+            self.free_rev += 1
         return job
 
     def clear_claims(self):
         self.claimed.clear()
         self._used_vec = None
+        self.free_rev += 1
+
+    def free_digest(self) -> bytes:
+        """Byte digest of the free-capacity vector, recomputed only when
+        the claim set changed (`free_rev` dirty flag) — the provisioner
+        polls this every reconcile for every worker, and an unchanged
+        pool must cost an int compare per worker, not a vector rebuild."""
+        cached = self._free_digest
+        if cached is not None and cached[0] == self.free_rev:
+            return cached[1]
+        digest = self.free_vec().tobytes()
+        self._free_digest = (self.free_rev, digest)
+        return digest
 
     def free_resources(self) -> dict[str, float]:
         free = dict(self.ad)
@@ -277,7 +301,8 @@ class Collector:
 
     MATCH_CACHE_MAX = 100_000    # LRU entries (per-cohort×shape verdicts)
 
-    def __init__(self, matchmaker: str | Matchmaker | None = None):
+    def __init__(self, matchmaker: str | Matchmaker | None = None, *,
+                 negotiation_batch: int = 1):
         self.workers: dict[str, Worker] = {}
         self._ids = itertools.count()
         self.matchmaker: Matchmaker = make_matchmaker(matchmaker)
@@ -292,6 +317,20 @@ class Collector:
         # changes; a pool of identical idle workers polls once per
         # version, not once per worker per event
         self._poll_cache = LRUCache(self.MATCH_CACHE_MAX)
+        # -- fused negotiation staging (stage_cycle / flush_staged) ----------
+        #: how many consecutive cycles to accumulate before flushing
+        #: through the backend's fused multi-cycle jit (1 = stage
+        #: nothing, every cycle runs immediately)
+        self.negotiation_batch = max(1, int(negotiation_batch))
+        self._staged_times: list[float] = []
+        self._staged_queues: list | None = None
+        self._staged_fp: tuple | None = None
+        # introspection counters (tests + bench read these)
+        self.fused_batches = 0      # batches that ran through the fused jit
+        self.fused_cycles = 0       # cycles covered by those batches
+        self.staged_fallbacks = 0   # batches replayed sequentially
+        self.noop_hits = 0          # cycles skipped by the no-op memo
+        self._noop_memo: tuple | None = None
 
     def advertise(self, worker: Worker):
         self.workers[worker.name] = worker
@@ -476,7 +515,7 @@ class Collector:
 
     # -- negotiation entry points (the Matchmaker-backed API) ----------------
     def run_cycle(self, queues, now: float, *, accountant=None,
-                  quantum: int = 1) -> int:
+                  quantum: int = 1, max_submit: float | None = None) -> int:
         """One matchmaking cycle; THE canonical negotiation entry point.
 
         `queues` is a single schedd queue or the flocking-ordered list of
@@ -484,13 +523,18 @@ class Collector:
         order (FIFO cohorts within each) against one shared free matrix;
         with an `Accountant` the cycle water-fills hierarchically — most
         owed schedd, then best-priority user, `quantum` claims per slice
-        (see core/fairshare.py).  Returns the number of new claims."""
+        (see core/fairshare.py).  `max_submit` restricts the plain path
+        to jobs submitted at or before that time (replay drivers hand
+        pre-loaded queues cycle timestamps).  Returns new claims."""
         if hasattr(queues, "claim"):
             queues = [queues]
         else:
             queues = list(queues)
         if accountant is None:
-            return self._plain_cycle(queues, now)
+            return self._plain_cycle(queues, now, max_submit=max_submit)
+        if max_submit is not None:
+            raise ValueError("max_submit is a plain-cycle knob; "
+                             "fair-share cycles see the live queue")
         return self._fairshare_cycle(queues, now, accountant, quantum)
 
     def negotiate_cycle(self, queues, now: float, *, accountant=None,
@@ -499,7 +543,155 @@ class Collector:
         return self.run_cycle(queues, now, accountant=accountant,
                               quantum=quantum)
 
-    def _plain_cycle(self, queues, now: float) -> int:
+    # -- fused multi-cycle negotiation (staging buffer -> fused jit) ----------
+    def _pool_fingerprint(self, now: float) -> tuple:
+        """(name, free_rev) of every alive worker — two equal
+        fingerprints mean no worker joined, left, booted, drained, or
+        changed a claim in between, so staged cycles only differ by job
+        arrivals and are fusable."""
+        return tuple((w.name, w.free_rev) for w in self.alive_workers(now))
+
+    def stage_cycle(self, queues, now: float) -> int:
+        """Stage one plain negotiation cycle at time `now` instead of
+        running it; once `negotiation_batch` cycles are staged (or on
+        `quiesce()`), the whole batch flushes through the matchmaker's
+        fused multi-cycle path in ONE device dispatch.  Returns claims
+        made by any flush this call triggered (0 while the batch is
+        still filling).
+
+        Only pools the fused jit can serve are staged at all: foreign
+        queues, quantity-reading expressions, and fair-share cycles run
+        immediately (fair-share goes through `run_cycle` as before).
+        Claims land with the STAGED cycle's timestamp, and the flush is
+        claim-for-claim identical to running each cycle at its staged
+        time — `flush_staged` falls back to a sequential time-cutoff
+        replay whenever fusion can't prove that."""
+        if hasattr(queues, "claim"):
+            queues = [queues]
+        else:
+            queues = list(queues)
+        if (self.negotiation_batch <= 1
+                or any(not hasattr(q, "idle_cohorts") for q in queues)):
+            return self._plain_cycle(queues, now)
+        claims = 0
+        if self._staged_times and self._staged_queues != queues:
+            claims += self.flush_staged()
+        if not self._staged_times:
+            self._staged_queues = queues
+            self._staged_fp = self._pool_fingerprint(now)
+        self._staged_times.append(now)
+        if len(self._staged_times) >= self.negotiation_batch:
+            claims += self.flush_staged()
+        return claims
+
+    def quiesce(self) -> int:
+        """Flush any staged cycles NOW.  Every external operation that
+        observes or mutates pool state mid-stream (snapshot, backend
+        attach/drain, schedd add/drain, flocking-order change) must call
+        this first — staged-but-unflushed negotiation is invisible to
+        them.  Returns claims made by the flush."""
+        return self.flush_staged()
+
+    def flush_staged(self) -> int:
+        """Run every staged cycle.  The fused path builds ONE problem
+        from the current idle cohorts, splits each cohort's demand into
+        per-cycle arrival deltas on the jobs' submit times, and hands the
+        K-cycle batch to `match_cycles` — device state stays resident
+        across the K cycles and the K plans apply back in staged order
+        with their staged timestamps.  Falls back to a sequential
+        time-cutoff replay (bit-identical by construction) when the
+        batch is not provably fusable: a single staged cycle, workers
+        changed mid-batch, quantity-reading expressions, or a cohort
+        that fully drains mid-batch and re-arrives (its cross-cohort
+        FIFO key would re-seed — see jobqueue._cohort_min)."""
+        if not self._staged_times:
+            return 0
+        times = self._staged_times
+        queues = self._staged_queues
+        fp0 = self._staged_fp
+        self._staged_times = []
+        self._staged_queues = None
+        self._staged_fp = None
+
+        workers = self.alive_workers(times[-1])
+        rows = deltas = None
+        fusable = (len(times) >= 2 and bool(workers)
+                   and self._pool_fingerprint(times[-1]) == fp0)
+        if fusable:
+            rows, deltas = self._staged_rows(queues, times)
+            fusable = rows is not None
+        if fusable:
+            reps = [next(iter(j.values())) for _qi, _k, j in rows]
+            fusable = not self._quantity_sensitive(reps, workers)
+        if fusable:
+            problem = self._build_problem(rows, workers)
+            problem.demand = np.zeros_like(problem.demand)
+            plans = match_cycles(self.matchmaker, problem, deltas)
+            fusable = not self._reseed_hazard(plans, deltas)
+        if not fusable:
+            self.staged_fallbacks += 1
+            return sum(self._plain_cycle(queues, t, max_submit=t)
+                       for t in times)
+        self.fused_batches += 1
+        self.fused_cycles += len(times)
+        claims = 0
+        for t, plan in zip(times, plans):
+            claims += self._apply_plan(queues, problem, plan, workers, t)
+        return claims
+
+    def _staged_rows(self, queues, times):
+        """Union cohort rows (cross-queue FIFO order, as `_plain_cycle`
+        sorts them) plus per-cycle arrival deltas: a job submitted at s
+        first becomes visible to the earliest staged cycle with
+        `times[k] >= s`; jobs submitted after `times[-1]` are invisible
+        to the whole batch."""
+        entries = []
+        for qi, q in enumerate(queues):
+            for key, jobs in q.idle_cohorts():
+                if jobs:
+                    entries.append(
+                        (q.cohort_first_submit(key), qi, key, jobs))
+        if not entries:
+            return None, None
+        entries.sort(key=lambda e: (e[0], e[1]))
+        rows = [(qi, key, jobs) for _first, qi, key, jobs in entries]
+        K, C = len(times), len(rows)
+        arrivals = np.zeros((K, C), dtype=np.int64)
+        for c, (_qi, _key, jobs) in enumerate(rows):
+            for job in jobs.values():
+                k = bisect.bisect_left(times, job.submitted_at)
+                if k < K:
+                    arrivals[k, c] += 1
+        return rows, [CycleDelta(arrivals=arrivals[k]) for k in range(K)]
+
+    @staticmethod
+    def _reseed_hazard(plans, deltas) -> bool:
+        """True when some cohort fully drains in one fused cycle and
+        receives arrivals in a LATER one — the sequential path would
+        re-seed its cross-cohort FIFO key at re-birth and may process
+        the batch in a different order, so such batches replay
+        sequentially instead of trusting the fused plans."""
+        K = len(plans)
+        C = len(deltas[0].arrivals)
+        # later[k]: does any cohort entry see arrivals strictly after k?
+        later = np.zeros((K, C), dtype=bool)
+        for k in range(K - 2, -1, -1):
+            later[k] = later[k + 1] | (deltas[k + 1].arrivals > 0)
+        d = np.zeros_like(deltas[0].arrivals)
+        for k in range(K - 1):
+            d = d + deltas[k].arrivals
+            drained = (d > 0) & (plans[k].per_cohort() >= d)
+            if np.any(drained & later[k]):
+                return True
+            d = d - plans[k].per_cohort()
+        return False
+
+    def _plain_cycle(self, queues, now: float, *,
+                     max_submit: float | None = None) -> int:
+        """One plain (no fair-share) cycle.  `max_submit` restricts the
+        pass to jobs submitted at or before that time — the staged-flush
+        fallback replays deferred cycles with the visibility each would
+        have had at its own timestamp."""
         workers = self.alive_workers(now)
         if not workers:
             return 0
@@ -514,12 +706,30 @@ class Collector:
                 else:
                     total += self.scan_cycle(q, now)
             return total
+        # no-op memo: a cycle that claimed NOTHING stays a no-op until
+        # the idle set (idle_seq) or some worker's claims/liveness (the
+        # pool fingerprint) change — drained-backlog steady states pay
+        # two int-tuple compares per cycle instead of a full match
+        memo_key = None
+        if max_submit is None:
+            memo_key = (tuple((id(q), q.idle_seq) for q in queues),
+                        self._pool_fingerprint(now))
+            if memo_key == self._noop_memo:
+                self.noop_hits += 1
+                return 0
         rows = []
         for qi, q in enumerate(queues):
-            cohorts = [(k, j) for k, j in q.idle_cohorts() if j]
+            cohorts = []
+            for k, j in q.idle_cohorts():
+                if max_submit is not None:
+                    j = {jid: job for jid, job in j.items()
+                         if job.submitted_at <= max_submit}
+                if j:
+                    cohorts.append((k, j))
             cohorts.sort(key=lambda kv: q.cohort_first_submit(kv[0]))
             rows.extend((qi, k, j) for k, j in cohorts)
         if not rows:
+            self._noop_memo = memo_key
             return 0
         reps = [next(iter(j.values())) for _qi, _k, j in rows]
         if self._quantity_sensitive(reps, workers):
@@ -529,10 +739,15 @@ class Collector:
                 cohorts = [(k, j) for rqi, k, j in rows if rqi == qi]
                 total += self._match_cohorts(q, cohorts, workers, free,
                                              now)
+            if total == 0 and memo_key is not None:
+                self._noop_memo = memo_key
             return total
         problem = self._build_problem(rows, workers)
         plan = self.matchmaker.match(problem)
-        return self._apply_plan(queues, problem, plan, workers, now)
+        claims = self._apply_plan(queues, problem, plan, workers, now)
+        if claims == 0 and memo_key is not None:
+            self._noop_memo = memo_key
+        return claims
 
     def _fairshare_cycle(self, queues, now: float, accountant,
                          quantum: int) -> int:
@@ -788,6 +1003,11 @@ class Collector:
                 continue
             pending = queue.cohort_jobs_sorted(
                 key, None if budget is None else budget - claims)
+            if len(pending) > len(jobs):
+                # a staged time-cutoff replay negotiates a submit-time
+                # PREFIX of the cohort: the dict handed in is the
+                # demand, and FIFO order makes the prefix exactly it
+                pending = pending[:len(jobs)]
             # A START/Requirements expression that reads offered QUANTITIES
             # (e.g. 'gpus >= 2') must be re-evaluated against the shrinking
             # offer after every claim — block-claiming is only exact for

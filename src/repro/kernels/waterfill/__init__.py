@@ -1,0 +1,3 @@
+from repro.kernels.waterfill.ops import (  # noqa: F401
+    waterfill, waterfill_reference,
+)

@@ -1,0 +1,173 @@
+"""Pallas TPU water-fill: the negotiation claim/absorb inner loop.
+
+One negotiation cycle walks cohorts in processing order and, per cohort,
+converts the request row into per-worker takes against the shrinking
+free-resource matrix — ``fits = floor(min_r free_r/want_r + eps)`` then
+the greedy prefix allocation ``take = clip(d - exclusive_cumsum(fits),
+0, fits)``.  The jax backend runs this as a chunked `lax.scan`; here the
+same chunk walk is a Pallas kernel so the free matrix lives in VMEM for
+the whole cycle instead of round-tripping through HBM per scan step.
+
+Tiling: grid = (nch,) with the single chunk axis sequential
+("arbitrary") — chunk c+1 must observe chunk c's claims, so the free
+matrix is a VMEM scratch that persists across grid steps (initialised at
+``program_id == 0`` via pl.when, flushed to the output block every step;
+the last step's write is the result).  Per grid step the kernel holds:
+
+  want/safe/big (chunk, R8)   request rows (R padded 6 -> 8 sublanes)
+  crow          (chunk, Wp)   uint8 compat mask, Wp a lane multiple
+  free          (R8, Wp)      f32/f64 VMEM scratch — THE carry
+  left          (1, 1)        remaining claim budget scratch
+
+The drain guard is identical to the jax backend's: a chunk whose
+componentwise-minimum request exceeds every worker's free vector in some
+resource is provably empty and skips its cohort loop via pl.when (takes
+rows are pre-zeroed, so skipping is claim-exact).
+
+dtype passes through: float64 under interpret mode (bit-identical to the
+jax/numpy backends — this is what CI pins), float32 when compiled for a
+real TPU (Mosaic has no f64 path; exact while quantities are integers
+below 2**24).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.matchmaker.base import FIT_EPS
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x;
+# accept either so the kernel runs on both sides of the rename
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+_R_SUBLANES = 8           # resource-axis padding (f32 min tile is (8, 128))
+
+
+def _waterfill_kernel(
+    freeT_ref,    # (R8, Wp)     initial free matrix (read once)
+    left_ref,     # (1, 1)       initial claim budget (read once)
+    want_ref,     # (1, chunk, R8)
+    safe_ref,     # (1, chunk, R8)  want where want>0 else 1
+    big_ref,      # (1, chunk, R8)  0 where want>0 else sentinel
+    d_ref,        # (1, chunk)      cohort demand
+    crow_ref,     # (1, chunk, Wp)  uint8 compat mask
+    cmin_ref,     # (1, R8)         chunk componentwise-min live request
+    takes_ref,    # (1, chunk, Wp)  int32 out
+    ran_ref,      # (1, 1)          int32 out — 1 if the chunk executed
+    free_out,     # (R8, Wp)        out — final free matrix
+    left_out,     # (1, 1)          out — final budget
+    free_s,       # (R8, Wp)       VMEM scratch: free carry across chunks
+    left_s,       # (1, 1)         VMEM scratch: budget carry
+    *,
+    chunk: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        free_s[...] = freeT_ref[...]
+        left_s[...] = left_ref[...]
+
+    free0 = free_s[...]
+    left0 = left_s[0, 0]
+
+    # drain guard — same arithmetic as the jax backend's chunk_step: a
+    # worker below the chunk's min live request in ANY resource fits no
+    # cohort of the chunk; all workers failing somewhere skips the loop
+    cmin = cmin_ref[0, :]
+    ok = free0 >= (cmin * (1.0 - 2 * FIT_EPS))[:, None]
+    alive = jnp.any(jnp.all(ok, axis=0)) & (left0 > 0)
+
+    takes_ref[...] = jnp.zeros_like(takes_ref)
+    ran_ref[0, 0] = alive.astype(jnp.int32)
+
+    @pl.when(alive)
+    def _run():
+        def body(c, carry):
+            free, left = carry
+            want = want_ref[0, c, :]
+            safe = safe_ref[0, c, :]
+            big = big_ref[0, c, :]
+            d = jnp.minimum(d_ref[0, c], left)
+            crow = crow_ref[0, c, :].astype(free.dtype)
+            ratio = free / safe[:, None] + big[:, None]
+            fits = jnp.maximum(
+                jnp.floor(jnp.min(ratio, axis=0) + FIT_EPS), 0.0)
+            fits = jnp.minimum(fits, d) * crow
+            cum = jnp.cumsum(fits)
+            take = jnp.clip(d - (cum - fits), 0.0, fits)
+            takes_ref[0, c, :] = jnp.round(take).astype(jnp.int32)
+            free = free - want[:, None] * take[None, :]
+            left = left - jnp.sum(take)
+            return free, left
+
+        free, left = lax.fori_loop(0, chunk, body, (free0, left0))
+        free_s[...] = free
+        left_s[0, 0] = left
+
+    # every step flushes the carry; the last grid step's write is final
+    free_out[...] = free_s[...]
+    left_out[...] = left_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def waterfill_pallas(
+    freeT: jax.Array,      # (R8, Wp)
+    left: jax.Array,       # (1, 1)
+    want: jax.Array,       # (nch, chunk, R8)
+    safe: jax.Array,       # (nch, chunk, R8)
+    big: jax.Array,        # (nch, chunk, R8)
+    demand: jax.Array,     # (nch, chunk)
+    crow: jax.Array,       # (nch, chunk, Wp) uint8
+    chunk_min: jax.Array,  # (nch, R8)
+    *,
+    interpret: bool = False,
+):
+    """Returns (takes (nch, chunk, Wp) int32, ran (nch, 1) int32,
+    freeT_after (R8, Wp), left_after (1, 1))."""
+    nch, chunk, R8 = want.shape
+    Wp = crow.shape[2]
+    dt = freeT.dtype
+
+    kernel = functools.partial(_waterfill_kernel, chunk=chunk)
+    takes, ran, free_out, left_out = pl.pallas_call(
+        kernel,
+        grid=(nch,),
+        in_specs=[
+            pl.BlockSpec((R8, Wp), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, chunk, R8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, R8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, R8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk, Wp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, R8), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, Wp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((R8, Wp), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nch, chunk, Wp), jnp.int32),
+            jax.ShapeDtypeStruct((nch, 1), jnp.int32),
+            jax.ShapeDtypeStruct((R8, Wp), dt),
+            jax.ShapeDtypeStruct((1, 1), dt),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((R8, Wp), dt),
+            pltpu.VMEM((1, 1), dt),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(freeT, left, want, safe, big, demand, crow, chunk_min)
+    return takes, ran, free_out, left_out

@@ -1,0 +1,68 @@
+"""Water-fill entry point: shape adaptation + backend dispatch.
+
+`waterfill` takes the matchmaker's chunked device layout — the same
+(nch, chunk, R) / (R, Wp) tensors the jax backend's scan consumes — pads
+the tiny resource axis to the TPU's 8-sublane tile, and runs the Pallas
+kernel.  Off-TPU (CI, CPU dry-runs) the kernel executes in interpret
+mode: the identical program graph evaluated by XLA:CPU, which is what
+lets the differential suite pin bit-identity against the jax and numpy
+backends in float64 without TPU hardware.
+
+Resource-axis padding is semantics-free by the same convention the
+matchmaker uses for zero-request lanes: padded `want` rows are 0, `safe`
+1, `big` the sentinel (their fit ratio is huge and never the min), the
+padded free rows are 0 and never decremented, and padded `chunk_min`
+lanes are 0 so the drain guard's `free >= 0` test cannot veto a chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.waterfill.kernel import _R_SUBLANES, waterfill_pallas
+from repro.kernels.waterfill.ref import waterfill_reference
+
+
+def _pad_r(x: np.ndarray, axis: int, value: float) -> np.ndarray:
+    pad = (-x.shape[axis]) % _R_SUBLANES
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths, constant_values=value)
+
+
+def waterfill(
+    freeT: np.ndarray,       # (R, Wp)
+    left: float,             # claim budget (may be inf)
+    want: np.ndarray,        # (nch, chunk, R)
+    safe: np.ndarray,        # (nch, chunk, R)
+    big: np.ndarray,         # (nch, chunk, R)
+    demand: np.ndarray,      # (nch, chunk)
+    crow: np.ndarray,        # (nch, chunk, Wp) uint8
+    chunk_min: np.ndarray,   # (nch, R)
+    *,
+    dtype,
+    interpret: bool | None = None,
+):
+    """Returns (takes (nch, chunk, Wp) int32, freeT_after (R, Wp),
+    ran (nch,) bool) — the jax backend's `_run` contract."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    R = freeT.shape[0]
+    takes, ran, free_out, _left_out = waterfill_pallas(
+        jnp.asarray(_pad_r(freeT, 0, 0.0), dtype=dtype),
+        jnp.full((1, 1), left, dtype=dtype),
+        jnp.asarray(_pad_r(want, 2, 0.0), dtype=dtype),
+        jnp.asarray(_pad_r(safe, 2, 1.0), dtype=dtype),
+        jnp.asarray(_pad_r(big, 2, 1e15), dtype=dtype),
+        jnp.asarray(demand, dtype=dtype),
+        jnp.asarray(crow),                           # uint8 mask
+        jnp.asarray(_pad_r(chunk_min, 1, 0.0), dtype=dtype),
+        interpret=interpret,
+    )
+    return takes, free_out[:R], (ran[:, 0] != 0)
+
+
+__all__ = ["waterfill", "waterfill_reference"]

@@ -1,0 +1,59 @@
+"""Dense jnp water-fill reference — the oracle the Pallas kernel and the
+chunked jax scan must both reproduce bit-for-bit (in float64).
+
+Semantics (the seed negotiator's greedy first-match walk, closed form):
+cohorts are visited in the given row order; per cohort the per-worker
+fit count is ``floor(min_r free_r/want_r + FIT_EPS)`` over the cohort's
+request vector (zero-request resources never constrain), masked by
+compat, capped at the cohort's remaining demand, and allocated greedily
+worker-by-worker via the exclusive prefix sum.  An optional claim
+budget caps the total takes across the whole cycle.
+
+This module is deliberately UNCHUNKED and unguarded — no drain skip, no
+padding tricks — so it stays an independent check on the fast paths
+rather than a re-statement of them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.matchmaker.base import FIT_EPS
+
+_ZERO_WANT_BIG = 1e15     # ratio offset for zero-request resource lanes
+
+
+def waterfill_reference(
+    free: jax.Array,       # (W, R) free capacity per worker
+    requests: jax.Array,   # (C, R) per-job request vector per cohort
+    demand: jax.Array,     # (C,)   idle jobs per cohort
+    compat: jax.Array,     # (C, W) 0/1 requirements mask
+    budget: jax.Array | float = jnp.inf,
+):
+    """Returns (takes (C, W) int32, free_after (W, R))."""
+    dt = free.dtype
+    freeT = free.T                                   # (R, W)
+    pos = requests > 0
+    safe = jnp.where(pos, requests, jnp.ones((), dt))
+    big = jnp.where(pos, jnp.zeros((), dt), _ZERO_WANT_BIG)
+    crow = compat.astype(dt)
+
+    def step(carry, x):
+        freeT, left = carry
+        want, safe_c, big_c, d, cr = x
+        d = jnp.minimum(d, left)
+        ratio = freeT / safe_c[:, None] + big_c[:, None]
+        fits = jnp.maximum(jnp.floor(jnp.min(ratio, axis=0) + FIT_EPS), 0.0)
+        fits = jnp.minimum(fits, d) * cr
+        cum = jnp.cumsum(fits)
+        take = jnp.clip(d - (cum - fits), 0.0, fits)
+        freeT = freeT - want[:, None] * take[None, :]
+        left = left - jnp.sum(take)
+        return (freeT, left), jnp.round(take).astype(jnp.int32)
+
+    left0 = jnp.asarray(budget, dtype=dt)
+    (freeT, _left), takes = lax.scan(
+        step, (freeT, left0),
+        (requests, safe, big, demand.astype(dt), crow))
+    return takes, freeT.T

@@ -237,3 +237,89 @@ def test_preview_memo_invalidated_by_new_demand():
     sim.queue.submit(gpu_job(600), sim.now)     # bumps idle_version
     p.reconcile(sim.now)
     assert p.preview_misses == misses0 + 1
+
+
+# ---------------------------------------------------------------------------
+# Free-matrix digest memo: the preview key reuses each worker's cached
+# capacity digest (dirty-flagged on claim changes) instead of re-hashing
+# every free vector per poll
+# ---------------------------------------------------------------------------
+
+def test_free_digest_cached_until_claims_change():
+    sim = mk_sim()
+    sim.submit_jobs(0, [gpu_job(600) for _ in range(4)])
+    sim.run(200)   # workers booted and claimed; several reconciles ran
+    p = sim.provisioner
+    assert p.digest_misses >= 1          # first look at each worker hashes
+    hits0, misses0 = p.digest_hits, p.digest_misses
+    p.reconcile(sim.now)
+    p.reconcile(sim.now)
+    # no claim changed between the polls: every ready worker hits
+    assert p.digest_hits > hits0
+    assert p.digest_misses == misses0
+
+
+def test_free_digest_invalidated_by_claim_change():
+    from repro.core.worker import Worker
+    from repro.core.classad import ClassAdExpr
+
+    w = Worker(name="w0", ad={"cpus": 8, "memory": 32},
+               start_expr=ClassAdExpr("True"))
+    w.booted_at = 0.0
+    rev0 = w.free_rev
+    d0 = w.free_digest()
+    assert w.free_digest() == d0 and w.free_rev == rev0   # cached
+    job = gpu_job(60)
+    job.jid = 1
+    w.add_claim(job)
+    assert w.free_rev > rev0
+    assert w.free_digest() != d0         # re-hashed after the claim
+    w.drop_claim(job.jid)
+    assert w.free_digest() == d0         # capacity restored -> same digest
+
+
+# ---------------------------------------------------------------------------
+# Incremental deficits: idle-hook counters replace the per-cycle recount
+# and must agree with the retired dry-run scan exactly
+# ---------------------------------------------------------------------------
+
+def test_incremental_deficits_match_oracle_live():
+    """`debug_exact_deficits` asserts counts == the full-recount oracle
+    inside every reconcile; a heterogeneous drain must never trip it."""
+    sim = mk_sim()
+    sim.provisioner.debug_exact_deficits = True
+    sim.submit_jobs(0, [gpu_job(300) for _ in range(6)])
+    sim.submit_jobs(10, [Job(ad={"request_cpus": 2, "request_memory": 4,
+                                 "runtime_s": 200.0}) for _ in range(8)])
+    sim.run(3000)
+    assert sim.queue.drained()
+    p = sim.provisioner
+    groups, by_schedd, legacy = p._idle_group_counts(sim.now)
+    assert not legacy and not groups     # drained pool counts to zero
+    assert not p._inc_counts
+
+
+def test_incremental_counts_track_idle_transitions():
+    sim = mk_sim()
+    p = sim.provisioner
+    sim.submit_jobs(0, [gpu_job(600) for _ in range(5)])
+    sim.run(10)    # reconcile ran -> counters rebuilt and hooked
+    total = sum(sum(per.values()) for per in p._inc_counts.values())
+    assert total == 5                    # all five still idle
+    sim.run(600)   # workers boot, claims land -> idle leaves decrement
+    total = sum(sum(per.values()) for per in p._inc_counts.values())
+    assert total == len(list(sim.queue.idle_jobs()))
+
+
+def test_idle_hook_fires_on_enter_and_leave():
+    q = JobQueue()
+    events = []
+    q.add_idle_hook(lambda job, delta: events.append((job.jid, delta)))
+    j = Job(ad={"request_cpus": 1, "request_memory": 1, "runtime_s": 5.0})
+    q.submit(j, 0.0)
+    assert events == [(j.jid, +1)]
+    q.claim(j.jid, "w0", 1.0)
+    assert events == [(j.jid, +1), (j.jid, -1)]
+    q.release(j.jid, 2.0)                # back to idle
+    assert events[-1] == (j.jid, +1)
+    assert q.idle_seq == 3

@@ -27,12 +27,14 @@ from repro.core.classad import ClassAdExpr
 from repro.core.fairshare import Accountant, ScheddSpec
 from repro.core.jobqueue import Job, JobQueue
 from repro.core.matchmaker import (
-    HAVE_JAX, MatchPlan, MatchProblem, NumpyMatchmaker, ScanMatchmaker,
-    make_matchmaker,
+    HAVE_JAX, HAVE_PALLAS, MatchPlan, MatchProblem, NumpyMatchmaker,
+    ScanMatchmaker, make_matchmaker,
 )
 from repro.core.worker import Collector, Worker
 
 needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+needs_pallas = pytest.mark.skipif(not HAVE_PALLAS,
+                                  reason="jax/pallas not installed")
 
 R = 6   # RESOURCE_KEYS width; column 0 is cpus
 
@@ -134,6 +136,71 @@ def test_jax_drain_guard_exact_when_pool_exhausts():
     p2 = random_problem(rng, C=600, W=4)
     p2.requests[300:, 0] = 0.0       # zero-cpu cohorts in late chunks
     assert_plans_equal(ref.match(p2), jaxmm.match(p2), "drain+zero-cpu")
+
+
+# -- pure problems: pallas water-fill kernel (interpret mode) ----------------
+
+@needs_pallas
+@pytest.mark.parametrize("fractional", [False, True])
+def test_pallas_interpret_identical_on_random_problems(fractional):
+    """The Pallas kernel in interpret mode (what CPU CI runs) must be
+    bit-identical to BOTH the jax scan and the numpy reference — the
+    same float64 arithmetic in a different program shape."""
+    pmm = make_matchmaker("pallas")
+    jaxmm = make_matchmaker("jax")
+    ref = NumpyMatchmaker()
+    rng = np.random.default_rng(31 + fractional)
+    for trial in range(12):
+        p = random_problem(rng, fractional=fractional)
+        plan_p = pmm.match(p)
+        label = f"trial={trial} fractional={fractional}"
+        np.testing.assert_array_equal(ref.match(p).takes, plan_p.takes,
+                                      err_msg=label)
+        plan_j = jaxmm.match(p)
+        np.testing.assert_array_equal(plan_j.takes, plan_p.takes,
+                                      err_msg=label)
+        np.testing.assert_array_equal(plan_j.free_after, plan_p.free_after,
+                                      err_msg=label + " free (bitwise)")
+
+
+@needs_pallas
+def test_pallas_interpret_budget_and_drain():
+    """Claim budgets thread through the kernel's VMEM scalar, and the
+    in-kernel drain guard must skip chunks claim-exactly when the pool
+    exhausts (demand >> supply)."""
+    pmm = make_matchmaker("pallas")
+    ref = NumpyMatchmaker()
+    rng = np.random.default_rng(37)
+    for trial in range(8):
+        p = random_problem(rng)
+        budget = int(rng.integers(1, 1 + int(p.demand.sum())))
+        assert_plans_equal(ref.match(p, budget=budget),
+                           pmm.match(p, budget=budget),
+                           f"budget trial={trial}")
+    p = random_problem(rng, C=600, W=4)
+    assert_plans_equal(ref.match(p), pmm.match(p), "drain")
+
+
+@needs_pallas
+def test_pallas_padding_boundaries():
+    """Chunk/lane bucket edges plus the kernel's own resource-axis pad
+    (6 -> 8 sublanes) — padding lanes must never constrain a fit."""
+    pmm = make_matchmaker("pallas")
+    ref = NumpyMatchmaker()
+    rng = np.random.default_rng(41)
+    for C in (1, 63, 64, 65):
+        for W in (1, 127, 128, 129):
+            p = random_problem(rng, C=C, W=W)
+            assert_plans_equal(ref.match(p), pmm.match(p), f"C={C} W={W}")
+
+
+@needs_pallas
+def test_collector_run_cycle_pallas_equals_numpy():
+    for seed in range(3):
+        ca, qa = build_pool("numpy", rng_seed=seed)
+        cb, qb = build_pool("pallas", rng_seed=seed)
+        assert ca.run_cycle(qa, 0.0) == cb.run_cycle(qb, 0.0)
+        assert claim_map(qa) == claim_map(qb), f"seed={seed}"
 
 
 # -- pure problems: numpy vs scan oracle -------------------------------------
