@@ -51,18 +51,19 @@ def federation():
     return backends
 
 
-def build(n_jobs: int, engine: str) -> Simulation:
+def build(n_jobs: int, engine: str, *, telemetry: bool = False) -> Simulation:
     cfg = ProvisionerConfig(
         submit_interval_s=30, idle_timeout_s=120, startup_delay_s=30,
         max_pods_per_group=600, max_total_pods=600)
     sim = Simulation(cfg, backends=federation(), tick_s=5, engine=engine,
-                     metrics_interval_s=60 if engine == "event" else None)
+                     metrics_interval_s=60 if engine == "event" else None,
+                     telemetry=telemetry)
     sim.submit_jobs(0, [gpu_job(120, gpus=1) for _ in range(n_jobs)])
     return sim
 
 
-def drain(n_jobs: int, engine: str) -> dict:
-    sim = build(n_jobs, engine)
+def drain(n_jobs: int, engine: str, *, telemetry: bool = False) -> dict:
+    sim = build(n_jobs, engine, telemetry=telemetry)
     with Timer() as t:
         sim.run_until_drained(max_t=5e6)
     assert sim.queue.drained(), f"{engine} engine failed to drain"
@@ -100,6 +101,13 @@ def main(argv=None) -> int:
                     help="skip the (slow) tick-loop baseline")
     ap.add_argument("--min-ratio", type=float, default=None,
                     help="fail if event/tick jobs-per-sec ratio is below")
+    ap.add_argument("--max-overhead", type=float, default=None,
+                    metavar="R",
+                    help="telemetry overhead guard: fail if the best "
+                         "telemetry-ON drain exceeds R x the best "
+                         "telemetry-OFF drain (3 runs each); the "
+                         "disabled path does strictly less work, so "
+                         "this bounds its overhead a fortiori")
     args = ap.parse_args(argv)
 
     event = drain(args.jobs, "event")
@@ -117,6 +125,28 @@ def main(argv=None) -> int:
         if args.min_ratio is not None and ratio < args.min_ratio:
             print(f"FAIL: speedup {ratio:.1f}x < required "
                   f"{args.min_ratio}x", file=sys.stderr)
+            return 1
+
+    if args.max_overhead is not None:
+        # interleave the two modes so drift (thermal, page cache, jit
+        # warmup) hits both equally; best-of-N filters the noise floor
+        walls_off, walls_on = [event["wall_s"]], []
+        for _ in range(4):
+            walls_on.append(
+                drain(args.jobs, "event", telemetry=True)["wall_s"])
+            walls_off.append(drain(args.jobs, "event")["wall_s"])
+        ratio = min(walls_on) / max(min(walls_off), 1e-9)
+        payload["overhead"] = {
+            "telemetry_off_s": min(walls_off),
+            "telemetry_on_s": min(walls_on),
+            "ratio": round(ratio, 4), "max": args.max_overhead}
+        print(f"telemetry overhead: off {min(walls_off)}s / "
+              f"on {min(walls_on)}s -> ratio {ratio:.3f} "
+              f"(max {args.max_overhead})")
+        if ratio > args.max_overhead:
+            print(f"FAIL: telemetry overhead {ratio:.3f} > "
+                  f"{args.max_overhead}", file=sys.stderr)
+            emit("event_engine", payload)
             return 1
 
     emit("event_engine", payload)

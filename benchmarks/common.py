@@ -3,21 +3,62 @@ from __future__ import annotations
 
 import json
 import os
+import platform
+import socket
+import subprocess
 import time
 
 
 OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "experiments", "bench")
 
+_META: dict | None = None
+_BENCH_T0: float | None = None
+
+
+def bench_meta() -> dict:
+    """Host / toolchain / revision fingerprint, computed once per
+    process — stamped into every emitted artifact so BENCH trajectories
+    are comparable across machines and commits."""
+    global _META
+    if _META is None:
+        sha = None
+        try:
+            p = subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+                capture_output=True, text=True, timeout=10)
+            sha = p.stdout.strip() or None
+        except (OSError, subprocess.SubprocessError):
+            pass
+        _META = {
+            "host": socket.gethostname(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "git_sha": sha,
+        }
+    return _META
+
+
+def begin_bench() -> None:
+    """Mark the start of one benchmark; the next emit() stamps the
+    elapsed wall time into its ``_meta`` block."""
+    global _BENCH_T0
+    _BENCH_T0 = time.time()
+
 
 def emit(name: str, payload: dict, *, echo: bool = True):
+    meta = dict(bench_meta())
+    if _BENCH_T0 is not None:
+        meta["wall_s"] = round(time.time() - _BENCH_T0, 3)
+    doc = {**payload, "_meta": meta}
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"{name}.json")
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=str)
+        json.dump(doc, f, indent=1, default=str)
     if echo:
         print(f"== {name} ==")
-        print(json.dumps(payload, indent=1, default=str))
+        print(json.dumps(doc, indent=1, default=str))
     return path
 
 

@@ -12,6 +12,7 @@ import time
 
 
 def main():
+    from benchmarks import common
     from benchmarks import (
         bench_event_engine, bench_federation, bench_flocking,
         bench_grouping, bench_kernels, bench_matchmaking,
@@ -30,6 +31,7 @@ def main():
         name = mod.__name__.split(".")[-1]
         t = time.time()
         try:
+            common.begin_bench()
             mod.run(echo=False)
             print(f"[bench] {name:20s} OK   ({time.time()-t:.1f}s)")
         except Exception as e:
@@ -39,6 +41,7 @@ def main():
     # roofline rendering if dry-run artifacts exist
     try:
         from benchmarks import bench_roofline
+        common.begin_bench()
         bench_roofline.run(echo=True)
         print("[bench] bench_roofline      OK")
     except FileNotFoundError:

@@ -197,6 +197,18 @@ class JaxMatchmaker:
         self.unroll = int(unroll)
         self._fn = _build_scan(self.chunk, self.unroll)
         self._fn_cycles = _build_cycles_scan(self.chunk, self.unroll)
+        # compile-vs-execute telemetry: XLA retraces per padded-shape
+        # bucket, so the first call on a fresh bucket pays the trace +
+        # compile and every repeat hits the executable cache.  The
+        # profiler reads `last_call` after each match.
+        self._seen_buckets: set[tuple] = set()
+        self.last_call: dict | None = None
+
+    def _note_call(self, kind: str, bucket: tuple):
+        compiled = bucket not in self._seen_buckets
+        self._seen_buckets.add(bucket)
+        self.last_call = {"kind": kind, "bucket": bucket,
+                          "compiled": compiled}
 
     def _prep(self, p: MatchProblem, active=None):
         """Order-permuted, padded host arrays (pad cohorts have demand 0
@@ -237,6 +249,7 @@ class JaxMatchmaker:
         chunk_min = req_live.reshape(-1, chunk, R).min(axis=1)
         nch = Cp // chunk
         left = math.inf if budget is None else float(budget)
+        self._note_call("match", (nch, Wp, self.dtype))
 
         if self.dtype == "float64":
             with enable_x64():
@@ -279,6 +292,7 @@ class JaxMatchmaker:
          Cp, Wp) = self._prep(p)
         nch = Cp // chunk
         K = len(deltas)
+        self._note_call("match_cycles", (nch, Wp, K, self.dtype))
 
         arrivals = np.zeros((K, Cp))
         free_addT = np.zeros((K, R, Wp))

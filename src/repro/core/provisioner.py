@@ -88,6 +88,7 @@ class Provisioner:
         worker_factory: Callable[..., Worker] | None = None,
         schedd_quotas: dict[str, float] | None = None,
         debug_exact_deficits: bool = False,
+        telemetry=None,
     ):
         self.cfg = cfg
         # one schedd or a flocking-ordered list of them (compat adapter,
@@ -127,13 +128,30 @@ class Provisioner:
         # cohort-set change bumps idle_version — so a hit implies an
         # identical dry run.
         self._preview_cache: tuple[tuple, list[dict]] | None = None
-        self.preview_hits = 0
-        self.preview_misses = 0
+        # shares the collector's telemetry (one registry per pool)
+        # unless explicitly handed its own
+        if telemetry is None:
+            self.telemetry = collector.telemetry
+        else:
+            from repro.observability import as_telemetry
+            self.telemetry = as_telemetry(telemetry)
+        reg = self.telemetry.registry
+        self._c_preview_hits = reg.counter(
+            "repro_preview_cache_hits_total",
+            "Reconciles served by the memoized negotiation dry run")
+        self._c_preview_misses = reg.counter(
+            "repro_preview_cache_misses_total",
+            "Reconciles that re-ran the negotiation dry run")
         # worker free-matrix digest reuse (Worker.free_rev dirty flag):
         # an unclaimed-pool poll costs an int compare per worker, not a
         # vector rebuild + serialization
-        self.digest_hits = 0
-        self.digest_misses = 0
+        self._c_digest_hits = reg.counter(
+            "repro_free_digest_hits_total",
+            "Worker free-digest polls answered by the free_rev flag")
+        self._c_digest_misses = reg.counter(
+            "repro_free_digest_misses_total",
+            "Worker free-digest polls that rebuilt the vector digest")
+        self._preview_s = 0.0     # preview wall accrued this reconcile
         # incremental deficit counters: filtered PRE-preview idle demand
         # per (group signature, schedd), maintained in O(changes) by the
         # queues' idle hooks instead of recounted per reconcile.  Stale
@@ -148,6 +166,24 @@ class Provisioner:
         #: per-cycle scan on every reconcile and assert equality (debug
         #: flag; the flocking differential suite runs with it on)
         self.debug_exact_deficits = debug_exact_deficits
+
+    # compat properties over the registry counters (the pre-registry int
+    # attributes are part of the test surface)
+    @property
+    def preview_hits(self) -> int:
+        return int(self._c_preview_hits.value)
+
+    @property
+    def preview_misses(self) -> int:
+        return int(self._c_preview_misses.value)
+
+    @property
+    def digest_hits(self) -> int:
+        return int(self._c_digest_hits.value)
+
+    @property
+    def digest_misses(self) -> int:
+        return int(self._c_digest_misses.value)
 
     @property
     def cluster(self) -> KubeCluster:
@@ -211,9 +247,9 @@ class Provisioner:
                 # costs an int compare, not a vector rebuild + hash
                 cached = w._free_digest
                 if cached is not None and cached[0] == w.free_rev:
-                    self.digest_hits += 1
+                    self._c_digest_hits.value += 1
                 else:
-                    self.digest_misses += 1
+                    self._c_digest_misses.value += 1
                 workers.append((w.name, w.free_digest()))
         key = (
             tuple((q.idle_version, q.n_idle()) for q in self.queues),
@@ -221,10 +257,14 @@ class Provisioner:
         )
         cached = self._preview_cache
         if cached is not None and cached[0] == key:
-            self.preview_hits += 1
+            self._c_preview_hits.value += 1
             return cached[1]
-        self.preview_misses += 1
+        self._c_preview_misses.value += 1
+        prof = self.telemetry.profiler
+        t_p0 = prof.now() if prof is not None else 0.0
         previews = self.collector.preview(self.queues, now)
+        if prof is not None:
+            self._preview_s += prof.now() - t_p0
         self._preview_cache = (key, previews)
         return previews
 
@@ -402,6 +442,11 @@ class Provisioner:
     def reconcile(self, now: float) -> ProvisionStats:
         """One pass of the provisioning logic. Idempotent at fixed demand."""
         stats = ProvisionStats()
+        prof = self.telemetry.profiler
+        t_r0 = 0.0
+        if prof is not None:
+            t_r0 = prof.now()
+            self._preview_s = 0.0
 
         groups, by_schedd, legacy = self._idle_group_counts(now)
         for sig, per in by_schedd.items():
@@ -464,6 +509,10 @@ class Provisioner:
                 self.stats.per_backend_submitted.get(name, 0) + k)
         # deficits are a gauge, not a counter: keep the latest snapshot
         self.stats.per_schedd_deficit = dict(stats.per_schedd_deficit)
+        if prof is not None:
+            prof.record_reconcile(
+                t=now, w_start=t_r0, wall_s=prof.now() - t_r0,
+                preview_s=self._preview_s, submitted=stats.submitted)
         return stats
 
     def maybe_reconcile(self, now: float) -> ProvisionStats | None:
@@ -584,6 +633,9 @@ class Provisioner:
             startup_delay=self.cfg.startup_delay_s,
             pod_name=name,
         )
+        # stamp the owning backend so lifecycle spans can label claims
+        # (set post-factory: custom factories need not accept the kwarg)
+        worker.backend = backend.name
 
         on_start, on_stop = self._pod_callbacks(worker)
 

@@ -74,6 +74,7 @@ from repro.core.stragglers import StragglerPolicy
 from repro.core.worker import (
     Collector, advance_workers, worker_from_state, worker_state,
 )
+from repro.observability import as_telemetry
 
 # same-timestamp ordering, mirroring the seed's intra-tick sequence
 P_EXTERNAL = 0
@@ -111,6 +112,7 @@ class Simulation:
         negotiate_quantum: int = 1,
         matchmaker=None,
         negotiation_batch: int | None = None,
+        telemetry=None,
     ):
         if engine not in ("event", "tick"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -170,8 +172,14 @@ class Simulation:
         # bench (benchmarks/bench_matchmaking.py)
         if negotiation_batch is None:
             negotiation_batch = getattr(cfg, "negotiation_batch", 1)
+        # telemetry=True turns on lifecycle spans + the cycle profiler;
+        # the metric registry (consolidated counters, pool gauges) is
+        # live either way.  Pass a Telemetry instance to share one
+        # registry across simulations.
+        self.telemetry = as_telemetry(telemetry)
         self.collector = Collector(matchmaker=matchmaker,
-                                   negotiation_batch=negotiation_batch)
+                                   negotiation_batch=negotiation_batch,
+                                   telemetry=self.telemetry)
         if backends is None:
             # single-backend compatibility adapter (seed signature)
             cluster = KubeCluster(nodes or [])
@@ -210,6 +218,10 @@ class Simulation:
             return w
 
         self.provisioner.worker_factory = tracking_factory
+
+        # span hooks on every queue + scrape-time pool gauges (a no-op
+        # shell when telemetry is disabled beyond gauge registration)
+        self.telemetry.attach_simulation(self)
 
         self.loop = EventLoop()
         self._advanced_until = 0.0
@@ -476,6 +488,7 @@ class Simulation:
             self.accountant.set_quota(name, quota)
             self.accountant.attach_queue(name, q)
         self.schedd_specs.append(ScheddSpec(name=name, quota=quota))
+        self.telemetry.attach_queue(q)
         return q
 
     def drain_schedd(self, name: str):
@@ -570,6 +583,13 @@ class Simulation:
             "rng": self.rng.bit_generator.state,
             "last_negotiate": self._last_negotiate,
         }
+        if self.telemetry.enabled:
+            # registry values + lifecycle event log (sim-time data);
+            # the profiler's wall-clock cycle log intentionally resets
+            # on restore (see Telemetry.state_dict).  The key is absent
+            # for telemetry-disabled sims, so their snapshots are
+            # byte-identical to pre-telemetry ones.
+            state["telemetry"] = self.telemetry.state_dict()
         return state
 
     def restore(self, state: dict):
@@ -658,6 +678,10 @@ class Simulation:
 
         self.rng.bit_generator.state = state["rng"]
         self._last_negotiate = float(state["last_negotiate"])
+
+        tel_state = state.get("telemetry")
+        if tel_state is not None and self.telemetry.enabled:
+            self.telemetry.load_state(tel_state)
 
         t = float(state["t"])
         self.loop = EventLoop(t)
@@ -910,6 +934,20 @@ class Simulation:
             accrue = getattr(b, "accrue_cost", None)
             if accrue is not None:
                 accrue(self.now)
+
+    # -- telemetry exporters -------------------------------------------------
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of the pool registry (the service
+        tier serves this at GET /metrics.prom).  Works with telemetry
+        disabled too — pool gauges and consolidated cache counters are
+        always live; spans/profiler series appear when enabled."""
+        return self.telemetry.prometheus_text()
+
+    def dump_trace(self, path: str) -> int:
+        """Write Chrome trace-event JSON (Perfetto / chrome://tracing)
+        of lifecycle spans + negotiation/reconcile phases.  Requires
+        telemetry=True.  Returns the number of trace events written."""
+        return self.telemetry.dump_trace(path)
 
     # -- summaries -----------------------------------------------------------------
     def summary(self) -> dict[str, Any]:

@@ -72,6 +72,7 @@ from repro.core.matchmaker import (
 )
 from repro.core.matchmaker.base import CycleDelta, match_cycles
 from repro.core.matchmaker.base import RESOURCE_KEYS  # noqa: F401
+from repro.observability import as_telemetry
 #   (re-exported: RESOURCE_KEYS moved to matchmaker.base with the
 #   protocol split; long-standing importers keep working)
 
@@ -105,12 +106,18 @@ class LRUCache:
     def __init__(self, maxsize: int):
         self.maxsize = int(maxsize)
         self._d: OrderedDict = OrderedDict()
+        # effectiveness stats, surfaced as repro_classad_cache_* gauges
+        # by the telemetry collect hook
+        self.hits = 0
+        self.misses = 0
 
     def get(self, key, default=None):
         try:
             value = self._d[key]
         except KeyError:
+            self.misses += 1
             return default
+        self.hits += 1
         self._d.move_to_end(key)
         return value
 
@@ -153,6 +160,7 @@ class Worker:
     startup_delay: float = 30.0
     pod_name: str | None = None
     work_rate: float = 1.0          # <1.0 models a straggling node
+    backend: str | None = None      # owning ScalingBackend (span labels)
 
     booted_at: float = -1.0                  # when startd became ready
     idle_since: float = -1.0
@@ -265,6 +273,7 @@ def worker_state(w: Worker) -> dict:
         "startup_delay": float(w.startup_delay),
         "pod_name": w.pod_name,
         "work_rate": w.work_rate,
+        "backend": w.backend,
         "booted_at": w.booted_at,
         "idle_since": w.idle_since,
         "terminated": w.terminated,
@@ -284,6 +293,7 @@ def worker_from_state(state: dict, jobs_by_jid: dict[int, Job]) -> Worker:
         startup_delay=float(state.get("startup_delay", 30.0)),
         pod_name=state.get("pod_name"),
         work_rate=float(state.get("work_rate", 1.0)),
+        backend=state.get("backend"),
     )
     w.booted_at = float(state.get("booted_at", -1.0))
     w.idle_since = float(state.get("idle_since", -1.0))
@@ -302,11 +312,17 @@ class Collector:
     MATCH_CACHE_MAX = 100_000    # LRU entries (per-cohort×shape verdicts)
 
     def __init__(self, matchmaker: str | Matchmaker | None = None, *,
-                 negotiation_batch: int = 1):
+                 negotiation_batch: int = 1, telemetry=None):
         self.workers: dict[str, Worker] = {}
         self._ids = itertools.count()
         self.matchmaker: Matchmaker = make_matchmaker(matchmaker)
         self._scan_oracle: Matchmaker = make_matchmaker("scan")
+        # telemetry: the registry half is always live (the introspection
+        # counters below moved into it and tests/benchmarks read them);
+        # the wall-clock profiler is None unless telemetry is enabled,
+        # and every timing site guards on that
+        self.telemetry = as_telemetry(telemetry)
+        self.profiler = self.telemetry.profiler
         # (job cohort, worker slot shape) -> bool; symmetric_match is a
         # pure function of the two ads, so entries never go stale on
         # their own — the LRU bound handles cohort churn, and
@@ -325,12 +341,41 @@ class Collector:
         self._staged_times: list[float] = []
         self._staged_queues: list | None = None
         self._staged_fp: tuple | None = None
-        # introspection counters (tests + bench read these)
-        self.fused_batches = 0      # batches that ran through the fused jit
-        self.fused_cycles = 0       # cycles covered by those batches
-        self.staged_fallbacks = 0   # batches replayed sequentially
-        self.noop_hits = 0          # cycles skipped by the no-op memo
+        # introspection counters, now registry families (tests + bench
+        # read them through the compat properties below)
+        reg = self.telemetry.registry
+        self._c_fused_batches = reg.counter(
+            "repro_fused_batches_total",
+            "Staged batches run through the fused multi-cycle jit")
+        self._c_fused_cycles = reg.counter(
+            "repro_fused_cycles_total",
+            "Negotiation cycles covered by fused batches")
+        self._c_fallbacks = reg.counter(
+            "repro_fused_fallbacks_total",
+            "Staged batches replayed sequentially, by reason", ("reason",))
+        self._c_noop_hits = reg.counter(
+            "repro_noop_memo_hits_total",
+            "Negotiation cycles skipped by the no-op memo")
         self._noop_memo: tuple | None = None
+
+    # compat properties over the registry families — the pre-registry
+    # int attributes these replaced are part of the test/bench surface
+    @property
+    def fused_batches(self) -> int:
+        return int(self._c_fused_batches.value)
+
+    @property
+    def fused_cycles(self) -> int:
+        return int(self._c_fused_cycles.value)
+
+    @property
+    def staged_fallbacks(self) -> int:
+        return int(sum(c.value
+                       for c in self._c_fallbacks.children.values()))
+
+    @property
+    def noop_hits(self) -> int:
+        return int(self._c_noop_hits.value)
 
     def advertise(self, worker: Worker):
         self.workers[worker.name] = worker
@@ -613,30 +658,55 @@ class Collector:
         self._staged_queues = None
         self._staged_fp = None
 
+        prof = self.profiler
+        t_f0 = prof.now() if prof is not None else 0.0
         workers = self.alive_workers(times[-1])
         rows = deltas = None
-        fusable = (len(times) >= 2 and bool(workers)
-                   and self._pool_fingerprint(times[-1]) == fp0)
-        if fusable:
+        t_m0 = t_a0 = t_f0
+        # fallback chain, first failing condition names the reason (the
+        # repro_fused_fallbacks_total{reason} series — the profiler's
+        # answer to "why didn't this batch fuse?")
+        reason = None
+        if len(times) < 2:
+            reason = "single_cycle"
+        elif not workers:
+            reason = "no_workers"
+        elif self._pool_fingerprint(times[-1]) != fp0:
+            reason = "pool_changed"
+        if reason is None:
             rows, deltas = self._staged_rows(queues, times)
-            fusable = rows is not None
-        if fusable:
+            if rows is None:
+                reason = "no_rows"
+        if reason is None:
             reps = [next(iter(j.values())) for _qi, _k, j in rows]
-            fusable = not self._quantity_sensitive(reps, workers)
-        if fusable:
+            if self._quantity_sensitive(reps, workers):
+                reason = "quantity_exprs"
+        if reason is None:
             problem = self._build_problem(rows, workers)
             problem.demand = np.zeros_like(problem.demand)
+            t_m0 = prof.now() if prof is not None else 0.0
             plans = match_cycles(self.matchmaker, problem, deltas)
-            fusable = not self._reseed_hazard(plans, deltas)
-        if not fusable:
-            self.staged_fallbacks += 1
+            t_a0 = prof.now() if prof is not None else 0.0
+            if self._reseed_hazard(plans, deltas):
+                reason = "reseed_hazard"
+        if reason is not None:
+            self._c_fallbacks.labels(reason).value += 1
             return sum(self._plain_cycle(queues, t, max_submit=t)
                        for t in times)
-        self.fused_batches += 1
-        self.fused_cycles += len(times)
+        self._c_fused_batches.value += 1
+        self._c_fused_cycles.value += len(times)
         claims = 0
         for t, plan in zip(times, plans):
             claims += self._apply_plan(queues, problem, plan, workers, t)
+        if prof is not None:
+            lc = getattr(self.matchmaker, "last_call", None)
+            prof.record_cycle(
+                t=times[-1], kind="fused", w_start=t_f0,
+                build_s=t_m0 - t_f0, match_s=t_a0 - t_m0,
+                apply_s=prof.now() - t_a0, claims=claims,
+                backend=getattr(self.matchmaker, "name", ""),
+                compiled=None if lc is None else lc.get("compiled"),
+                fused_k=len(times))
         return claims
 
     def _staged_rows(self, queues, times):
@@ -715,8 +785,10 @@ class Collector:
             memo_key = (tuple((id(q), q.idle_seq) for q in queues),
                         self._pool_fingerprint(now))
             if memo_key == self._noop_memo:
-                self.noop_hits += 1
+                self._c_noop_hits.value += 1
                 return 0
+        prof = self.profiler
+        t_c0 = prof.now() if prof is not None else 0.0
         rows = []
         for qi, q in enumerate(queues):
             cohorts = []
@@ -741,12 +813,27 @@ class Collector:
                                              now)
             if total == 0 and memo_key is not None:
                 self._noop_memo = memo_key
+            if prof is not None:
+                prof.record_cycle(
+                    t=now, kind="legacy", w_start=t_c0, build_s=0.0,
+                    match_s=prof.now() - t_c0, apply_s=0.0,
+                    claims=total, backend="legacy")
             return total
         problem = self._build_problem(rows, workers)
+        t_m0 = prof.now() if prof is not None else 0.0
         plan = self.matchmaker.match(problem)
+        t_a0 = prof.now() if prof is not None else 0.0
         claims = self._apply_plan(queues, problem, plan, workers, now)
         if claims == 0 and memo_key is not None:
             self._noop_memo = memo_key
+        if prof is not None:
+            lc = getattr(self.matchmaker, "last_call", None)
+            prof.record_cycle(
+                t=now, kind="plain", w_start=t_c0,
+                build_s=t_m0 - t_c0, match_s=t_a0 - t_m0,
+                apply_s=prof.now() - t_a0, claims=claims,
+                backend=getattr(self.matchmaker, "name", ""),
+                compiled=None if lc is None else lc.get("compiled"))
         return claims
 
     def _fairshare_cycle(self, queues, now: float, accountant,
@@ -754,6 +841,8 @@ class Collector:
         workers = self.alive_workers(now)
         if not workers:
             return 0
+        prof = self.profiler
+        t_c0 = prof.now() if prof is not None else 0.0
         accountant.reset_cycle()
         names = [getattr(q, "name", f"schedd{i:02d}")
                  for i, q in enumerate(queues)]
@@ -785,9 +874,16 @@ class Collector:
                     self._match_cohorts(q, cohorts, workers, free, now,
                                         budget=budget, on_claim=observe)))
             accountant.reset_cycle()
+            if prof is not None:
+                prof.record_cycle(
+                    t=now, kind="legacy", w_start=t_c0, build_s=0.0,
+                    match_s=prof.now() - t_c0, apply_s=0.0,
+                    claims=total, backend="legacy")
             return total
 
         problem = self._build_problem(rows, workers)
+        t_b1 = prof.now() if prof is not None else 0.0
+        match_s = apply_s = 0.0
         group_rows: dict[tuple[int, str], list[int]] = {}
         for c, g in enumerate(group_of):
             group_rows.setdefault(g, []).append(c)
@@ -806,10 +902,15 @@ class Collector:
 
             mask = np.zeros(C, dtype=bool)
             mask[group_rows[(si, user)]] = True
+            t_s0 = prof.now() if prof is not None else 0.0
             plan = self.matchmaker.match(problem, budget=quantum,
                                          active=mask)
+            t_s1 = prof.now() if prof is not None else 0.0
             got = self._apply_plan(queues, problem, plan, workers, now,
                                    on_claim=observe)
+            if prof is not None:
+                match_s += t_s1 - t_s0
+                apply_s += prof.now() - t_s1
             problem.free = plan.free_after
             problem.demand = problem.demand - plan.per_cohort()
             if got:
@@ -823,6 +924,13 @@ class Collector:
         # priority queries (metrics, owed-share deficits) must not see
         # stale virtual charges on top of them
         accountant.reset_cycle()
+        if prof is not None:
+            lc = getattr(self.matchmaker, "last_call", None)
+            prof.record_cycle(
+                t=now, kind="fairshare", w_start=t_c0,
+                build_s=t_b1 - t_c0, match_s=match_s, apply_s=apply_s,
+                claims=total, backend=getattr(self.matchmaker, "name", ""),
+                compiled=None if lc is None else lc.get("compiled"))
         return total
 
     def _fairshare_ladder(self, queues, names, active, workers, free,

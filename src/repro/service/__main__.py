@@ -11,6 +11,11 @@
     python -m repro.service status --url http://127.0.0.1:8080
     python -m repro.service metrics --url http://127.0.0.1:8080
 
+    # telemetry: Prometheus scrape / Chrome trace (open in Perfetto)
+    curl http://127.0.0.1:8080/metrics.prom
+    python -m repro.service trace --url http://127.0.0.1:8080 \
+        --path trace.json
+
     # full-state snapshot to disk; later: serve --resume pool.json
     python -m repro.service snapshot --url http://127.0.0.1:8080 \
         --path pool.json
@@ -112,6 +117,17 @@ def _cmd_client(args) -> int:
         return _print(rc.status())
     if verb == "metrics":
         return _print(rc.metrics())
+    if verb == "metrics-prom":
+        print(rc.metrics_prom(), end="")
+        return 0
+    if verb == "trace":
+        doc = rc.trace()
+        if args.path:
+            with open(args.path, "w") as f:
+                json.dump(doc, f)
+            print(f"{len(doc['traceEvents'])} events -> {args.path}")
+            return 0
+        return _print(doc)
     if verb == "job":
         return _print(rc.job_status(args.jid))
     if verb == "rm":
@@ -215,6 +231,27 @@ def _cmd_smoke(args) -> int:
             return fail(f"/metrics series missing {key!r}")
         if key not in m["gauges"]:
             return fail(f"/metrics gauges missing {key!r}")
+
+    # 4b. telemetry surfaces: Prometheus text + Chrome trace over HTTP
+    prom = rc2.metrics_prom()
+    for needle in ("# TYPE repro_pool_idle_jobs gauge",
+                   "# TYPE repro_job_wait_seconds histogram",
+                   "# TYPE repro_cycle_phase_seconds histogram",
+                   "repro_job_spans_total"):
+        if needle not in prom:
+            return fail(f"/metrics.prom missing {needle!r}")
+    tr = rc2.trace()
+    evs = tr.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return fail("/trace has no traceEvents")
+    if any(not {"name", "ph", "pid"} <= set(e)
+           or (e["ph"] != "M" and "ts" not in e) for e in evs):
+        return fail("/trace events missing required keys")
+    if not any(e.get("ph") == "X" and e.get("cat") == "job,run"
+               for e in evs):
+        return fail("/trace has no job run spans")
+    print(f"telemetry: {len(prom.splitlines())} prom lines, "
+          f"{len(evs)} trace events")
     rc2.shutdown()
     server2.server_close()
 
@@ -300,9 +337,11 @@ def main(argv=None) -> int:
     sm.set_defaults(fn=_cmd_submit)
 
     for verb, opts in (
-        ("status", ()), ("metrics", ()), ("shutdown", ()),
+        ("status", ()), ("metrics", ()), ("metrics-prom", ()),
+        ("shutdown", ()),
         ("job", ("jid",)), ("rm", ("jid",)),
         ("snapshot", ("path",)),
+        ("trace", ("tracepath",)),
         ("drain-backend", ("name", "at")),
         ("add-backend", ("bini",)),
         ("add-schedd", ("name", "quota")),
@@ -317,6 +356,10 @@ def main(argv=None) -> int:
             p.add_argument("--path", default=None,
                            help="save to this file on the SERVER "
                                 "(inline JSON when omitted)")
+        if "tracepath" in opts:
+            p.add_argument("--path", default=None,
+                           help="write Chrome trace JSON to this local "
+                                "file (print inline when omitted)")
         if "name" in opts:
             p.add_argument("--name", required=True)
         if "at" in opts:

@@ -8,6 +8,8 @@ layer is a thin JSON codec over PoolService.
   GET  /healthz        liveness + current sim time
   GET  /status         queue depths, backends, driver state
   GET  /metrics        gauges + per-backend cost/waste + EUP + series
+  GET  /metrics.prom   Prometheus text exposition (text/plain; 0.0.4)
+  GET  /trace          Chrome trace-event JSON (telemetry must be on)
   GET  /job?jid=N      one job's state (live or terminal index)
   POST /submit         {"records": [...], "schedd"?, "at_trace_times"?,
                         "at"?} -> jids / scheduled count
@@ -54,6 +56,15 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _send_text(self, code: int, text: str,
+                   content_type: str = "text/plain; charset=utf-8") -> None:
+        body = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
     def _body(self) -> dict:
         n = int(self.headers.get("Content-Length") or 0)
         if n == 0:
@@ -77,6 +88,15 @@ class _Handler(BaseHTTPRequestHandler):
             self._route(svc.status)
         elif url.path == "/metrics":
             self._route(svc.metrics)
+        elif url.path == "/metrics.prom":
+            try:
+                self._send_text(
+                    200, svc.metrics_prom(),
+                    "text/plain; version=0.0.4; charset=utf-8")
+            except (ValueError, KeyError, TypeError) as e:
+                self._send(400, {"error": f"{type(e).__name__}: {e}"})
+        elif url.path == "/trace":
+            self._route(svc.trace)
         elif url.path == "/job":
             q = parse_qs(url.query)
             self._route(lambda: svc.job_status(int(q["jid"][0])))

