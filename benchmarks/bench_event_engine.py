@@ -69,7 +69,7 @@ def drain(n_jobs: int, engine: str, *, telemetry: bool = False) -> dict:
     assert sim.queue.drained(), f"{engine} engine failed to drain"
     done = len(sim.queue.completed_log)
     assert done == n_jobs, (done, n_jobs)
-    return {
+    row = {
         "engine": engine,
         "jobs": n_jobs,
         "wall_s": round(t.s, 3),
@@ -78,6 +78,24 @@ def drain(n_jobs: int, engine: str, *, telemetry: bool = False) -> dict:
         "pods_submitted": sim.provisioner.stats.submitted,
         "gpu_utilization": round(sim.summary()["gpu_utilization"], 4),
     }
+    prof = sim.collector.profiler
+    if prof is not None:
+        totals = prof.phase_totals()
+        row["phases"] = {k: (round(v, 4) if isinstance(v, float) else v)
+                         for k, v in totals.items()}
+    return row
+
+
+def preview_split_meta(row: dict) -> dict:
+    """The reconcile/preview wall split of one telemetry-on drain, in
+    the shape stamped into the artifact's ``_meta`` block."""
+    phases = row.get("phases") or {}
+    return {"reconcile_preview_split": {
+        "jobs": row["jobs"],
+        "reconcile_s": phases.get("reconcile_s"),
+        "preview_s": phases.get("preview_s"),
+        "jit_compiles_by_path": phases.get("jit_compiles_by_path"),
+    }}
 
 
 def run(echo: bool = True) -> dict:
@@ -85,10 +103,11 @@ def run(echo: bool = True) -> dict:
     comparison, same shape the CI smoke uses."""
     event = drain(1_000, "event")
     tick = drain(1_000, "tick")
+    probe = drain(1_000, "event", telemetry=True)
     ratio = event["jobs_per_sec"] / max(tick["jobs_per_sec"], 1e-9)
     payload = {"event": event, "tick": tick, "speedup": round(ratio, 2)}
     assert ratio >= 5, f"event engine speedup collapsed: {ratio:.1f}x"
-    emit("event_engine", payload, echo=echo)
+    emit("event_engine", payload, echo=echo, meta=preview_split_meta(probe))
     return payload
 
 
@@ -127,13 +146,16 @@ def main(argv=None) -> int:
                   f"{args.min_ratio}x", file=sys.stderr)
             return 1
 
+    probe = None
     if args.max_overhead is not None:
         # interleave the two modes so drift (thermal, page cache, jit
         # warmup) hits both equally; best-of-N filters the noise floor
         walls_off, walls_on = [event["wall_s"]], []
         for _ in range(4):
-            walls_on.append(
-                drain(args.jobs, "event", telemetry=True)["wall_s"])
+            row = drain(args.jobs, "event", telemetry=True)
+            if probe is None:
+                probe = row
+            walls_on.append(row["wall_s"])
             walls_off.append(drain(args.jobs, "event")["wall_s"])
         ratio = min(walls_on) / max(min(walls_off), 1e-9)
         payload["overhead"] = {
@@ -146,10 +168,13 @@ def main(argv=None) -> int:
         if ratio > args.max_overhead:
             print(f"FAIL: telemetry overhead {ratio:.3f} > "
                   f"{args.max_overhead}", file=sys.stderr)
-            emit("event_engine", payload)
+            emit("event_engine", payload, meta=preview_split_meta(probe))
             return 1
 
-    emit("event_engine", payload)
+    if probe is None:
+        # cheap instrumented drain just for the _meta phase split
+        probe = drain(min(args.jobs, 2_000), "event", telemetry=True)
+    emit("event_engine", payload, meta=preview_split_meta(probe))
     if args.budget_s is not None and event["wall_s"] > args.budget_s:
         print(f"FAIL: event engine took {event['wall_s']}s "
               f"> budget {args.budget_s}s", file=sys.stderr)

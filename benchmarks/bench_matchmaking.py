@@ -33,10 +33,17 @@ K-wave submission campaign, three series on identical pools:
 `e2e_identical` gates all three claim maps (jid, worker, timestamp)
 bitwise; `--e2e-min-ratio` gates jax_s / fused_s at the first tier.
 
+The PREVIEW REPLAY tier (ISSUE 10) streams the 2k-job diurnal day
+through the standard federation with the profiler on, once per backend,
+and splits the provisioner's reconcile wall into preview vs the rest —
+`--preview-max-ratio` gates the jax preview wall against numpy's (the
+batched vmapped preview dispatch must not pay per-call jit overhead).
+
 Usage:
     python benchmarks/bench_matchmaking.py [--tiers 10k,100k,1m]
         [--budget-s SECONDS] [--min-ratio 5] [--repeats 3]
-        [--e2e-min-ratio 1.5]
+        [--e2e-min-ratio 1.5] [--preview-jobs 2000]
+        [--preview-max-ratio 2]
 """
 from __future__ import annotations
 
@@ -88,6 +95,66 @@ def best_of(fn, repeats: int) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+# -- replay tier: provisioner preview wall over the 2k diurnal day -----------
+
+def run_preview_replay(n_jobs: int = 2_000, duration_s: float = 14_400.0,
+                       seed: int = 3, batch: int = 8) -> dict:
+    """ISSUE 10 acceptance surface: stream the diurnal trace through
+    the standard federation with the profiler on, once per backend, and
+    report where the provisioner's reconcile wall goes.  The jax
+    backend's batched preview dispatch (device-resident constants, no
+    per-call problem rebuild) must keep its preview wall within the
+    same order as numpy's — the `--preview-max-ratio` CI guard."""
+    from repro.workload.compare import standard_policy
+    from repro.workload.generators import diurnal_day
+    from repro.workload.replay import replay_trace
+
+    out: dict = {"jobs": n_jobs, "duration_s": duration_s, "seed": seed,
+                 "negotiation_batch": batch}
+    backends = ("numpy",) + (("jax",) if HAVE_JAX else ())
+    for mm in backends:
+        trace = diurnal_day(n_jobs, seed=seed, duration_s=duration_s)
+        # fusion-friendly cadence: negotiations fire every 20s INSIDE a
+        # 60s tick/reconcile/metrics grid, so the [20,40] windows carry
+        # no observer events and the backlog-driven deferral can stage
+        # 2+ cycles per flush (the default 30s tick grid puts a
+        # reconcile on every negotiation instant, vetoing every window)
+        spec = standard_policy("fill-first", tick_s=60.0,
+                               negotiate_interval_s=20.0,
+                               metrics_interval_s=60.0)
+        spec.ini = spec.ini.replace(
+            "[provision]\n",
+            f"[provision]\nmatchmaker={mm}\nnegotiation_batch={batch}\n", 1)
+        sim = spec.build(telemetry=True)
+        replay_trace(sim, trace, coalesce_s=0.0)
+        t0 = time.perf_counter()
+        sim.run_until_drained(max_t=5e6)
+        wall = time.perf_counter() - t0
+        assert sim.queue.drained(), f"{mm} replay failed to drain"
+        totals = sim.collector.profiler.phase_totals()
+        col = sim.collector
+        fallbacks = {k[0]: int(c.value)
+                     for k, c in col._c_fallbacks.children.items()}
+        flushes = col.fused_batches + col.staged_fallbacks
+        out[mm] = {
+            "wall_s": round(wall, 3),
+            "reconcile_s": round(totals["reconcile_s"], 3),
+            "preview_s": round(totals["preview_s"], 3),
+            "preview_legacy": col.preview_legacy,
+            "jit_compiles_by_path": totals["jit_compiles_by_path"],
+            "fused_batches": col.fused_batches,
+            "fused_cycles": col.fused_cycles,
+            "fallbacks": fallbacks,
+            "single_cycle_fraction": (
+                round(fallbacks.get("single_cycle", 0) / flushes, 3)
+                if flushes else None),
+        }
+    if "jax" in out and out["numpy"]["preview_s"] > 0:
+        out["preview_ratio"] = round(
+            out["jax"]["preview_s"] / out["numpy"]["preview_s"], 3)
+    return out
 
 
 # -- end-to-end tier: Collector build -> match -> apply over K waves ---------
@@ -176,7 +243,8 @@ def run_e2e(tier: str, repeats: int, jax_mm, numpy_mm) -> dict:
 
 
 def run(echo: bool = True, tiers=("10k", "100k"), repeats: int = 5,
-        e2e_tiers=("10k",), e2e_repeats: int = 3):
+        e2e_tiers=("10k",), e2e_repeats: int = 3,
+        preview_jobs: int | None = 2_000):
     ref = NumpyMatchmaker()
     jaxmm = make_matchmaker("jax") if HAVE_JAX else None
     out = {"have_jax": HAVE_JAX, "tiers": {}, "e2e": {}}
@@ -202,8 +270,17 @@ def run(echo: bool = True, tiers=("10k", "100k"), repeats: int = 5,
             out["tiers"][tier] = row
         for tier in e2e_tiers:
             out["e2e"][tier] = run_e2e(tier, e2e_repeats, jaxmm, ref)
+        if preview_jobs:
+            out["preview_replay"] = run_preview_replay(preview_jobs)
     out["wall_s"] = round(total.s, 2)
-    emit("matchmaking", out, echo=echo)
+    meta = None
+    pr = out.get("preview_replay")
+    if pr:
+        meta = {"reconcile_preview_split": {
+            mm: {"reconcile_s": pr[mm]["reconcile_s"],
+                 "preview_s": pr[mm]["preview_s"]}
+            for mm in ("numpy", "jax") if mm in pr}}
+    emit("matchmaking", out, echo=echo, meta=meta)
     return out
 
 
@@ -222,6 +299,13 @@ def main(argv=None) -> int:
     ap.add_argument("--e2e-min-ratio", type=float, default=None,
                     help="fail if the fused-batch speedup over per-cycle "
                          "jax at the first e2e tier is below this")
+    ap.add_argument("--preview-jobs", type=int, default=2_000,
+                    help="diurnal replay size for the preview tier "
+                         "(0 disables it)")
+    ap.add_argument("--preview-max-ratio", type=float, default=None,
+                    help="fail if the jax preview wall exceeds this "
+                         "multiple of the numpy preview wall on the "
+                         "diurnal replay tier")
     args = ap.parse_args(argv)
     tiers = [t.strip() for t in args.tiers.split(",") if t.strip()]
     e2e_tiers = [t.strip() for t in args.e2e_tiers.split(",") if t.strip()]
@@ -232,8 +316,39 @@ def main(argv=None) -> int:
               f"(e2e: {sorted(E2E)})", file=sys.stderr)
         return 2
     out = run(echo=True, tiers=tiers, repeats=args.repeats,
-              e2e_tiers=e2e_tiers)
+              e2e_tiers=e2e_tiers, preview_jobs=args.preview_jobs or None)
     rc = 0
+    if args.preview_max_ratio is not None:
+        pr = out.get("preview_replay") or {}
+        ratio = pr.get("preview_ratio")
+        if ratio is None:
+            print("[bench] FAIL: --preview-max-ratio given but the "
+                  "preview replay tier did not run with jax",
+                  file=sys.stderr)
+            rc = 1
+        elif ratio > args.preview_max_ratio:
+            print(f"[bench] FAIL: jax preview wall {pr['jax']['preview_s']}s"
+                  f" is {ratio}x numpy's {pr['numpy']['preview_s']}s "
+                  f"(max {args.preview_max_ratio}x)", file=sys.stderr)
+            rc = 1
+        # backlog-driven live fusion must engage on the replay: with
+        # negotiation_batch > 1 the quiet windows between the 60s
+        # reconcile instants must defer flushes, so single-cycle
+        # fallbacks can no longer be 100% of flushes (the pre-deferral
+        # live engine quiesced every cycle in place).  Completion-heavy
+        # stretches still veto deferral cycle-by-cycle — exactness over
+        # batching — so the guard is on the fraction, not on a count of
+        # non-empty fused batches (tests/test_live_fusion.py pins those
+        # on a saturated pool).
+        for mm in ("numpy", "jax"):
+            row = pr.get(mm)
+            if (row is not None and pr.get("negotiation_batch", 1) > 1
+                    and not (row["single_cycle_fraction"] is not None
+                             and row["single_cycle_fraction"] < 1.0)):
+                print(f"[bench] FAIL: live fusion never engaged on the "
+                      f"{mm} preview replay (single-cycle fallbacks were "
+                      f"100% of flushes)", file=sys.stderr)
+                rc = 1
     for tier in tiers:
         row = out["tiers"][tier]
         if row["identical"] is False:

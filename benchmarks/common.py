@@ -47,11 +47,17 @@ def begin_bench() -> None:
     _BENCH_T0 = time.time()
 
 
-def emit(name: str, payload: dict, *, echo: bool = True):
-    meta = dict(bench_meta())
+def emit(name: str, payload: dict, *, echo: bool = True,
+         meta: dict | None = None):
+    """`meta` entries merge into the ``_meta`` block — bench-specific
+    context (e.g. the reconcile/preview wall split) that should ride
+    with the host fingerprint rather than the measurement payload."""
+    doc_meta = dict(bench_meta())
     if _BENCH_T0 is not None:
-        meta["wall_s"] = round(time.time() - _BENCH_T0, 3)
-    doc = {**payload, "_meta": meta}
+        doc_meta["wall_s"] = round(time.time() - _BENCH_T0, 3)
+    if meta:
+        doc_meta.update(meta)
+    doc = {**payload, "_meta": doc_meta}
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"{name}.json")
     with open(path, "w") as f:

@@ -135,6 +135,23 @@ class EventLoop:
         self._skim()
         return self._heap[0][0] if self._heap else None
 
+    def has_event_before(self, at: float, priority: int) -> bool:
+        """True when any LIVE event would fire strictly before the slot
+        ``(at, priority)`` — i.e. its key is lexicographically smaller,
+        with a 1e-9 time tolerance so float jitter on equal grids counts
+        as "before".  O(heap) scan, no mutation: the negotiation-
+        deferral arming check (simulation.py) asks this once per
+        candidate window, and ANY intervening event — an external
+        submit/failure injection, a reconcile, a backend timer, even a
+        same-instant lower-priority follower — vetoes deferring past
+        it."""
+        for t, prio, _seq, handle, _fn in self._heap:
+            if handle.cancelled:
+                continue
+            if t < at - 1e-9 or (t <= at + 1e-9 and prio < priority):
+                return True
+        return False
+
     def fire_next(self) -> float | None:
         """Fire exactly one event at its exact timestamp; returns the
         timestamp, or None when the heap is empty."""

@@ -155,6 +155,42 @@ def match_cycles(mm: "Matchmaker", problem: MatchProblem,
     return sequential_match_cycles(mm, problem, deltas)
 
 
+def sequential_preview_many(mm: "Matchmaker", problem: MatchProblem,
+                            frees: list[np.ndarray],
+                            demands: list[np.ndarray] | None = None,
+                            ) -> list[np.ndarray]:
+    """The batched-preview reference semantics: N INDEPENDENT previews of
+    the same cohort structure, candidate i solved against ``frees[i]``
+    (and ``demands[i]`` when given, else the problem's demand), each
+    returning only the per-cohort absorbed counts ``plan.per_cohort()``.
+    Candidates do NOT carry state into each other — this is the
+    provisioner asking "what WOULD each candidate pool shape absorb",
+    not a fused multi-cycle negotiation.  Backends with a vectorised
+    `preview_many` must match this loop exactly
+    (tests/test_preview_many.py pins it against the numpy reference)."""
+    out: list[np.ndarray] = []
+    for i, f in enumerate(frees):
+        sub = dataclasses.replace(
+            problem, free=f,
+            demand=problem.demand if demands is None else demands[i])
+        out.append(mm.match(sub).per_cohort())
+    return out
+
+
+def preview_many(mm: "Matchmaker", problem: MatchProblem,
+                 frees: list[np.ndarray],
+                 demands: list[np.ndarray] | None = None,
+                 ) -> list[np.ndarray]:
+    """Dispatch a batch of independent previews to the backend's
+    vectorised implementation when it has one (the jax backend evaluates
+    all candidates in ONE jitted vmap dispatch), else the sequential
+    reference."""
+    fused = getattr(mm, "preview_many", None)
+    if fused is not None:
+        return fused(problem, frees, demands)
+    return sequential_preview_many(mm, problem, frees, demands)
+
+
 def cohort_fits(free: np.ndarray, want: np.ndarray,
                 demand: int) -> np.ndarray:
     """How many `want`-sized jobs each worker row of `free` absorbs —

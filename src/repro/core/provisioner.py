@@ -55,7 +55,7 @@ from repro.core.groups import (
     GroupSignature, group_jobs, matches_signature, signature_of,
 )
 from repro.core.jobqueue import JobQueue
-from repro.core.worker import Collector, Worker
+from repro.core.worker import Collector, LRUCache, Worker
 
 
 @dataclasses.dataclass
@@ -75,6 +75,7 @@ class Provisioner:
     local pool in front (see examples/grid_portal.py)."""
 
     COHORT_CACHE_MAX = 50_000    # entries; reset-on-full (pure caches)
+    PREVIEW_CACHE_MAX = 256      # per-candidate dry-run memo entries
 
     def __init__(
         self,
@@ -119,15 +120,18 @@ class Provisioner:
         # signature are pure functions of a cohort's (identical) ads
         self._cohort_filter: dict[tuple, bool] = {}
         self._cohort_sig: dict[tuple, GroupSignature] = {}
-        # single-entry memo over the negotiation dry run: an IDLE pool
-        # reconciles every interval against unchanged demand and
+        # per-candidate LRU memo over the negotiation dry run: an IDLE
+        # pool reconciles every interval against unchanged demand and
         # capacity, and the preview is the expensive half of the pass.
         # Keyed on (per-queue idle fingerprint, ready-worker free-matrix
         # digest): any claim/release/boot/death changes a worker's free
         # vector, any submit/remove changes an idle count, and a
         # cohort-set change bumps idle_version — so a hit implies an
-        # identical dry run.
-        self._preview_cache: tuple[tuple, list[dict]] | None = None
+        # identical dry run.  Multi-entry (was: latest-only) so each
+        # distinct candidate pool state keeps its own dry run and a
+        # state that recurs non-consecutively — an A/B/A claim-release
+        # flap, or alternating flocking phases — still hits.
+        self._preview_cache = LRUCache(self.PREVIEW_CACHE_MAX)
         # shares the collector's telemetry (one registry per pool)
         # unless explicitly handed its own
         if telemetry is None:
@@ -255,17 +259,17 @@ class Provisioner:
             tuple((q.idle_version, q.n_idle()) for q in self.queues),
             tuple(workers),
         )
-        cached = self._preview_cache
-        if cached is not None and cached[0] == key:
+        cached = self._preview_cache.get(key)
+        if cached is not None:
             self._c_preview_hits.value += 1
-            return cached[1]
+            return cached
         self._c_preview_misses.value += 1
         prof = self.telemetry.profiler
         t_p0 = prof.now() if prof is not None else 0.0
         previews = self.collector.preview(self.queues, now)
         if prof is not None:
             self._preview_s += prof.now() - t_p0
-        self._preview_cache = (key, previews)
+        self._preview_cache.put(key, previews)
         return previews
 
     # -- incremental deficit counters (idle hooks) ---------------------------
@@ -610,7 +614,7 @@ class Provisioner:
             per_backend_submitted=dict(s.get("per_backend_submitted", {})),
             per_schedd_deficit=dict(s.get("per_schedd_deficit", {})),
         )
-        self._preview_cache = None
+        self._preview_cache.invalidate()
         self._cohort_filter.clear()
         self._cohort_sig.clear()
         # restores rebuild the queues WITHOUT firing idle hooks — the

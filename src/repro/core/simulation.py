@@ -226,12 +226,18 @@ class Simulation:
         self.loop = EventLoop()
         self._advanced_until = 0.0
         self._external_pending = 0
+        # live-fusion deferral horizon: while a negotiation backlog is
+        # staged, pre-event advancement is parked up to this time and
+        # replayed by flush_staged at the staged timestamps (the
+        # collector's advance_hook below).  -inf == nothing deferred.
+        self._defer_until = -math.inf
         # every periodic handle is retained by name so runtime
         # reconfiguration (drain_backend) can cancel a backend's timers
         # and restore() can re-install the full set on a fresh loop
         self._timers: dict[str, Any] = {}
         self._backend_timers: dict[str, list] = {}
         if engine == "event":
+            self.collector.advance_hook = self._advance_unchecked
             self._install_periodics()
 
     @staticmethod
@@ -301,16 +307,85 @@ class Simulation:
                 self.queues, now, accountant=self.accountant,
                 quantum=self.negotiate_quantum)
         elif self.collector.negotiation_batch > 1:
-            # live engine: stage, then quiesce in the SAME instant —
-            # events between negotiation times observe claims (worker
-            # advancement, C2 idle clocks), so cycles cannot actually
-            # defer here; the staging path still runs end-to-end and
-            # batch-capable drivers (service backlog flush, e2e bench)
-            # get real K>1 fusion by staging without the quiesce
+            # live backlog fusion: stage this cycle, and DEFER the flush
+            # when nothing can observe or change pool state before the
+            # next negotiation firing — no event in the window, no
+            # completion, no idle-timeout expiry (`_defer_ok`).  The
+            # next firing extends the backlog, so negotiation_batch=K
+            # engages in live mode; the eventual flush replays worker
+            # advancement at the staged timestamps (the collector's
+            # advance_hook), keeping claim maps bit-identical to the
+            # per-cycle path.  Any veto quiesces in the same instant —
+            # exactly the old behavior.
             self.collector.stage_cycle(self.queue, now)
-            self.collector.quiesce()
+            if self.collector._staged_times and self._defer_ok(now):
+                h = self._timers["negotiate"]
+                self._defer_until = h.first + (h.k + 1) * h.interval
+            else:
+                self.collector.quiesce()
+                self._defer_until = -math.inf
         else:
             self.collector.run_cycle(self.queue, now)
+
+    def _defer_ok(self, now: float) -> bool:
+        """May the staged negotiation backlog stay unflushed until the
+        next negotiate firing?  Yes only when the window [now, t_next]
+        is provably unobservable:
+
+          * no live event fires before the (t_next, P_NEGOTIATE) slot —
+            reconciles, backend ticks, stragglers, metrics, external
+            injections, and same-instant followers all veto
+            (`EventLoop.has_event_before`);
+          * no running claim can complete inside the window (capacity
+            return would have to be negotiated), and none runs an
+            opaque `work_fn`;
+          * no worker's idle timeout can expire inside it (C2
+            self-termination is a pool change).
+
+        Completion times are computed from `_advanced_until` — claim
+        remaining_s is exact as of the last advancement, which deferral
+        itself parks — so the check stays exact across chained
+        windows."""
+        h = self._timers.get("negotiate")
+        if h is None or h.cancelled:
+            return False
+        t_next = h.first + (h.k + 1) * h.interval
+        if self.loop.has_event_before(t_next, P_NEGOTIATE):
+            return False
+        margin = 1e-6
+        horizon = t_next + margin
+        base = self._advanced_until
+        for w in self.collector.workers.values():
+            if w.terminated:
+                continue
+            if w.idle_timeout <= (t_next - now) + margin:
+                return False
+            if w.claimed:
+                for job in w.claimed.values():
+                    if job.work_fn is not None:
+                        return False
+                    rate = w.work_rate
+                    need = (job.remaining_s / rate if rate > 0
+                            else math.inf)
+                    if base + need <= horizon:
+                        return False
+            elif (not w.draining and w.idle_since >= 0
+                    and w.idle_since + w.idle_timeout <= horizon):
+                return False
+        return True
+
+    def quiesce_negotiation(self) -> int:
+        """Flush any deferred negotiation backlog NOW and bring worker
+        advancement back up to the current instant — the boundary call
+        every external observer goes through (snapshots, runtime
+        reconfiguration, service-driver injections, end of run()).
+        Returns claims made by the flush."""
+        if self.engine != "event":
+            return 0
+        claims = self.collector.quiesce()
+        self._defer_until = -math.inf
+        self._advance_unchecked(self.loop.now)
+        return claims
 
     def _straggler_cb(self, now: float):
         self.straggler_policy.tick(self.pool_queue, self.collector,
@@ -382,7 +457,21 @@ class Simulation:
 
     def _advance_to(self, t: float):
         """Integrate continuous state (running jobs, worker clocks) up to
-        exactly `t` — called before every event fires."""
+        exactly `t` — called before every event fires.  While a
+        negotiation backlog is deferred (staged cycles pending and `t`
+        inside the armed horizon) advancement is parked: `flush_staged`
+        replays it segment-by-segment at the staged timestamps through
+        `Collector.advance_hook`, reproducing the per-cycle run's exact
+        advancement boundaries."""
+        if self.collector._staged_times:
+            if t <= self._defer_until + 1e-9:
+                return
+            # horizon overrun (should not happen: _defer_ok vetoes any
+            # event inside the window) — flush before advancing past it
+            self.collector.quiesce()
+        self._advance_unchecked(t)
+
+    def _advance_unchecked(self, t: float):
         if t <= self._advanced_until:
             return
         dt = t - self._advanced_until
@@ -412,7 +501,7 @@ class Simulation:
         cancels its timers.  Event engine only."""
         if self.engine != "event":
             raise ValueError("drain_backend requires engine='event'")
-        self.collector.quiesce()    # staged cycles see the pre-drain pool
+        self.quiesce_negotiation()  # staged cycles see the pre-drain pool
         b = self.provisioner.backend(name)      # KeyError on unknown
         b.draining = True
         now = self.loop.now
@@ -454,7 +543,7 @@ class Simulation:
         alive-time start at attach, not at the epoch."""
         if self.engine != "event":
             raise ValueError("add_backend requires engine='event'")
-        self.collector.quiesce()
+        self.quiesce_negotiation()
         taken = ({b.name for b in self.backends}
                  | {b.name for b in self.detached_backends})
         if backend.name in taken:
@@ -478,7 +567,7 @@ class Simulation:
                 "(construct with schedds=... or fairshare=...)")
         if any(q.name == name for q in self.queues):
             raise ValueError(f"schedd {name!r} already exists")
-        self.collector.quiesce()    # flocking order changes below
+        self.quiesce_negotiation()  # flocking order changes below
         q = JobQueue(name=name, ids=self.queues[0]._ids)
         self.queues.append(q)
         self.pool_queue.queues.append(q)
@@ -495,7 +584,7 @@ class Simulation:
         """Stop accepting submissions on one schedd; its queued and
         running jobs keep negotiating and complete normally.  Call
         `detach_schedd` once it has fully drained."""
-        self.collector.quiesce()
+        self.quiesce_negotiation()
         self.queue_named(name).draining = True
 
     def detach_schedd(self, name: str):
@@ -508,7 +597,7 @@ class Simulation:
             raise ValueError(f"schedd {name!r} still has jobs")
         if len(self.queues) == 1:
             raise ValueError("cannot detach the last schedd")
-        self.collector.quiesce()
+        self.quiesce_negotiation()
         self.queues.remove(q)
         self.pool_queue.queues.remove(q)
         self.provisioner.detach_queue(q)
@@ -540,7 +629,7 @@ class Simulation:
         restore().  Straggler-policy internal memory is not carried."""
         if self.engine != "event":
             raise ValueError("state_dict requires engine='event'")
-        self.collector.quiesce()    # staged cycles are not serializable
+        self.quiesce_negotiation()  # staged cycles are not serializable
         if self._external_pending > 0 and not allow_pending_external:
             raise ValueError(
                 f"{self._external_pending} external event(s) still "
@@ -687,6 +776,7 @@ class Simulation:
         self.loop = EventLoop(t)
         self.now = t
         self._advanced_until = t
+        self._defer_until = -math.inf   # snapshots are quiescent
         self._external_pending = 0
         self._timers = {}
         self._backend_timers = {}
@@ -898,7 +988,10 @@ class Simulation:
         if until <= self.now:
             return
         self.loop.run_until(until, pre=self._advance_to)
-        self._advance_to(until)
+        # a deferred negotiation backlog must not outlive the run call:
+        # callers observe state between runs
+        self.quiesce_negotiation()
+        self._advance_unchecked(until)
         self.now = until
         self._flush_accounting()
 
@@ -922,6 +1015,7 @@ class Simulation:
             self._advance_to(t)
             self.loop.fire_next()
             self.now = self.loop.now
+        self.quiesce_negotiation()
         self._flush_accounting()
 
     def _flush_accounting(self):

@@ -70,7 +70,9 @@ from repro.core.jobqueue import (
 from repro.core.matchmaker import (
     MatchPlan, MatchProblem, Matchmaker, cohort_fits, make_matchmaker,
 )
-from repro.core.matchmaker.base import CycleDelta, match_cycles
+from repro.core.matchmaker.base import (
+    CycleDelta, match_cycles, sequential_preview_many,
+)
 from repro.core.matchmaker.base import RESOURCE_KEYS  # noqa: F401
 from repro.observability import as_telemetry
 #   (re-exported: RESOURCE_KEYS moved to matchmaker.base with the
@@ -316,6 +318,13 @@ class Collector:
         self.workers: dict[str, Worker] = {}
         self._ids = itertools.count()
         self.matchmaker: Matchmaker = make_matchmaker(matchmaker)
+        # a pool matchmaker serves previews from the first reconcile on;
+        # backends that can pre-compile their canonical preview bucket
+        # (jax's 512-lane floor) do it here, at pool startup, instead of
+        # inside the first reconcile's preview wall
+        warm = getattr(self.matchmaker, "warm_preview", None)
+        if warm is not None:
+            warm()
         self._scan_oracle: Matchmaker = make_matchmaker("scan")
         # telemetry: the registry half is always live (the introspection
         # counters below moved into it and tests/benchmarks read them);
@@ -356,7 +365,22 @@ class Collector:
         self._c_noop_hits = reg.counter(
             "repro_noop_memo_hits_total",
             "Negotiation cycles skipped by the no-op memo")
+        self._c_preview_legacy = reg.counter(
+            "repro_preview_legacy_total",
+            "Previews forced onto the legacy live-offer walk by "
+            "quantity-reading expressions (estimate, not exact — see "
+            "Collector.preview)")
         self._noop_memo: tuple | None = None
+        # -- live-fusion advancement hook (backlog-driven batching) ----------
+        #: when set (the event engine installs `Simulation.
+        #: _advance_unchecked`), `flush_staged` interleaves worker
+        #: advancement with the staged cycles: before applying the plan
+        #: (or replaying the fallback cycle) for staged time t, the pool
+        #: is advanced to t — exactly the pre-event advancement the
+        #: deferred cycles skipped.  None (the default) keeps the
+        #: pre-advanced bench/replay semantics: flushes assume the
+        #: caller already advanced the pool past the staged window.
+        self.advance_hook = None
 
     # compat properties over the registry families — the pre-registry
     # int attributes these replaced are part of the test/bench surface
@@ -376,6 +400,10 @@ class Collector:
     @property
     def noop_hits(self) -> int:
         return int(self._c_noop_hits.value)
+
+    @property
+    def preview_legacy(self) -> int:
+        return int(self._c_preview_legacy.value)
 
     def advertise(self, worker: Worker):
         self.workers[worker.name] = worker
@@ -689,14 +717,25 @@ class Collector:
             t_a0 = prof.now() if prof is not None else 0.0
             if self._reseed_hazard(plans, deltas):
                 reason = "reseed_hazard"
+        if (reason is None and self.advance_hook is not None
+                and self._advance_hazard(queues, problem, plans,
+                                         workers, times)):
+            reason = "completion_hazard"
+        hook = self.advance_hook
         if reason is not None:
             self._c_fallbacks.labels(reason).value += 1
-            return sum(self._plain_cycle(queues, t, max_submit=t)
-                       for t in times)
+            claims = 0
+            for t in times:
+                if hook is not None:
+                    hook(t)
+                claims += self._plain_cycle(queues, t, max_submit=t)
+            return claims
         self._c_fused_batches.value += 1
         self._c_fused_cycles.value += len(times)
         claims = 0
         for t, plan in zip(times, plans):
+            if hook is not None:
+                hook(t)
             claims += self._apply_plan(queues, problem, plan, workers, t)
         if prof is not None:
             lc = getattr(self.matchmaker, "last_call", None)
@@ -754,6 +793,71 @@ class Collector:
             if np.any(drained & later[k]):
                 return True
             d = d - plans[k].per_cohort()
+        return False
+
+    def _advance_hazard(self, queues, problem, plans, workers,
+                        times) -> bool:
+        """Live-fusion guard: True when interleaved advancement could
+        return capacity (or retire a worker) MID-BATCH — state the fused
+        plans, computed for the whole window up front, did not see.
+        Checked only when `advance_hook` is set (event-engine mode):
+
+          * a worker whose idle timeout is shorter than the staged span,
+            or whose already-running idle clock expires inside it, could
+            self-terminate (C2) between two staged cycles;
+          * a claim made by a NON-FINAL staged cycle that completes (or
+            runs an opaque `work_fn`) before the final staged time would
+            free capacity a later fused cycle should have re-matched.
+
+        Pre-existing claims need no walk here: the event engine only
+        defers a window after proving none of them can complete inside
+        it (`Simulation._defer_ok`), and the flush never advances past
+        the last staged time.  Conservative by construction — a hazard
+        falls back to the exact sequential replay, it never mis-fuses."""
+        margin = 1e-6
+        span = times[-1] - times[0]
+        for w in workers:
+            if w.idle_timeout <= span + margin:
+                return True
+            if (not w.claimed and w.idle_since >= 0
+                    and w.idle_since + w.idle_timeout
+                    <= times[-1] + margin):
+                return True
+        K = len(times)
+        if K < 2:
+            return False
+        C = problem.n_cohorts
+        # claims of cycles 0..K-2 consume the cohort FIFO prefix in
+        # staged order — walk the exact (job, worker) pairs _apply_plan
+        # will create, before creating them
+        totals = np.zeros(C, dtype=np.int64)
+        for plan in plans[:-1]:
+            totals += plan.per_cohort()
+        pending: list = [None] * C
+        used = np.zeros(C, dtype=np.int64)
+        for t, plan in zip(times[:-1], plans[:-1]):
+            takes = plan.takes
+            for c in problem.order:
+                row = takes[c]
+                if int(row.sum()) <= 0:
+                    continue
+                if pending[c] is None:
+                    qi, key = problem.keys[c]
+                    pending[c] = queues[qi].cohort_jobs_sorted(
+                        key, int(totals[c]))
+                jobs = pending[c]
+                ji = int(used[c])
+                for wi in np.nonzero(row)[0]:
+                    rate = workers[wi].work_rate
+                    for job in jobs[ji:ji + int(row[wi])]:
+                        if job.work_fn is not None:
+                            return True
+                        need = (job.remaining_s / rate if rate > 0
+                                else float("inf"))
+                        if t + need <= times[-1] + margin:
+                            return True
+                        ji += 1
+                used[c] = ji
         return False
 
     def _plain_cycle(self, queues, now: float, *,
@@ -969,19 +1073,53 @@ class Collector:
         partial slots the old unclaimed-worker count missed — is not
         provisioned for again.
 
-        Estimate caveat: quantity-reading START/Requirements expressions
-        are evaluated against the live offer, not the virtually-drained
-        one (legacy fallback path), so the preview can over-count
-        absorption for such policies by at most one cohort slice per
-        worker."""
+        Estimate caveat (quantity-reading expressions): a START or
+        Requirements expression that reads offered quantities forces the
+        legacy live-offer walk (`_preview_legacy`, counted by
+        `repro_preview_legacy_total`), which evaluates each cohort's
+        expression against the worker's LIVE offer instead of the
+        virtually-drained one.  The error is bounded at **one cohort
+        slice per worker**: for each worker the walk hands out at most
+        one `min(fits, remaining)` slice per cohort under a stale
+        verdict, and a verdict can only go stale once per worker —
+        capacity only shrinks within the dry run — so the over-count
+        never exceeds the first mis-admitted slice, `fits(live free)`
+        jobs, per worker.  Under-count cannot happen: a job admitted by
+        the drained offer is admitted by the live one.
+        tests/test_preview_counters.py pins this bound."""
+        return self.preview_candidates(queues, now)[0]
+
+    def preview_candidates(self, queues, now: float,
+                           frees: list | None = None) -> list[list[dict]]:
+        """Batched preview: evaluate N candidate free matrices against
+        ONE problem built from the current idle cohorts, in ONE
+        matchmaker dispatch where the backend supports it (the jax
+        backend's vmapped `preview_many`; others run the sequential
+        reference).  ``frees`` is a list of (W, R) candidate matrices
+        over `alive_workers(now)` row order — None means one candidate,
+        the live free matrix.  Returns one per-queue absorption list
+        (the `preview` shape) per candidate.
+
+        The jax fast path keeps the problem's cohort constants
+        device-resident across calls keyed on the problem STRUCTURE
+        (cohort keys + worker slot shapes), so the per-reconcile cost is
+        shipping the free matrix down and Cp ints back — not rebuilding
+        and re-uploading the padded problem."""
         if hasattr(queues, "claim"):
             queues = [queues]
         else:
             queues = list(queues)
-        out: list[dict] = [{} for _ in queues]
+        # staged-but-unflushed cycles are invisible to a dry run: flush
+        # them (with interleaved advancement in live-fusion mode) so the
+        # preview sees post-negotiation truth
+        if self._staged_times:
+            self.flush_staged()
+        n_cand = 1 if frees is None else len(frees)
+        outs: list[list[dict]] = [[{} for _ in queues]
+                                  for _ in range(n_cand)]
         workers = self.alive_workers(now)
         if not workers:
-            return out
+            return outs
         entries = []
         for qi, q in enumerate(queues):
             if not hasattr(q, "idle_cohorts"):
@@ -991,25 +1129,49 @@ class Collector:
                     entries.append(
                         (q.cohort_first_submit(key), qi, key, jobs))
         if not entries:
-            return out
+            return outs
         entries.sort(key=lambda e: (e[0], e[1]))
         rows = [(qi, key, jobs) for _first, qi, key, jobs in entries]
         reps = [next(iter(j.values())) for _qi, _k, j in rows]
         if self._quantity_sensitive(reps, workers):
-            return self._preview_legacy(queues, rows, workers)
+            self._c_preview_legacy.value += 1
+            if frees is None:
+                return [self._preview_legacy(queues, rows, workers)]
+            return [self._preview_legacy(queues, rows, workers, free=f)
+                    for f in frees]
         problem = self._build_problem(rows, workers)
-        plan = self.matchmaker.match(problem)
-        per = plan.per_cohort()
-        for c, (qi, key, _jobs) in enumerate(rows):
-            if per[c]:
-                out[qi][key] = int(per[c])
-        return out
+        cand = [problem.free] if frees is None else list(frees)
+        fused = getattr(self.matchmaker, "preview_many", None)
+        if fused is not None:
+            # structure token for the backend's device-constant session
+            # (worker identity is irrelevant — only slot shapes feed the
+            # request/compat constants)
+            token = (tuple(problem.keys),
+                     tuple(w.match_key() for w in workers))
+            pers = fused(problem, cand, session=token)
+            prof = self.profiler
+            if prof is not None:
+                lc = getattr(self.matchmaker, "last_call", None)
+                if lc is not None and lc.get("compiled"):
+                    prof.note_compile("preview")
+        else:
+            pers = sequential_preview_many(self.matchmaker, problem,
+                                           cand)
+        for out, per in zip(outs, pers):
+            for c, (qi, key, _jobs) in enumerate(rows):
+                if per[c]:
+                    out[qi][key] = int(per[c])
+        return outs
 
-    def _preview_legacy(self, queues, rows, workers) -> list[dict]:
+    def _preview_legacy(self, queues, rows, workers, *,
+                        free: np.ndarray | None = None) -> list[dict]:
         """Pre-protocol preview walk, kept for quantity-reading
         expressions (live-offer evals; see the caveat on `preview`)."""
         out: list[dict] = [{} for _ in queues]
-        free = np.stack([w.free_vec() for w in workers])
+        if free is None:
+            free = np.stack([w.free_vec() for w in workers])
+        else:
+            free = np.array(free, dtype=np.float64, copy=True)
         for qi, key, jobs in rows:
             rep = next(iter(jobs.values()))
             want = _job_req_vec(rep)

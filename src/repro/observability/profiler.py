@@ -38,9 +38,17 @@ class CycleProfiler:
             ("phase",), WALL_SECONDS_BUCKETS)
         self.cycles_c = registry.counter(
             "repro_cycles_total", "Negotiation cycles by kind", ("kind",))
+        # labelled by entry path: "cycle" covers match/match_cycles
+        # dispatches from negotiation, "preview" the provisioner dry-run
+        # dispatches.  The split exists because the preview path owns
+        # its own jit (vmapped, guard-free) AND warms padding buckets
+        # before the first recorded cycle — an unlabelled counter
+        # under-reported vs `repro_matchmaker_seen_buckets` (measured
+        # jit_compiles=0 on the 2k replay while buckets grew).
         self.jit_compiles = registry.counter(
             "repro_matchmaker_jit_compiles_total",
-            "Matchmaker calls that hit a fresh padding bucket (XLA trace)")
+            "Matchmaker calls that hit a fresh padding bucket (XLA "
+            "trace), by entry path", ("path",))
         self.reconcile_h = registry.histogram(
             "repro_reconcile_seconds",
             "Wall seconds per provisioner reconcile",
@@ -71,7 +79,7 @@ class CycleProfiler:
         self.phase_h.labels("apply").observe(apply_s)
         self.cycles_c.labels(kind).value += 1
         if compiled:
-            self.jit_compiles.value += 1
+            self.jit_compiles.labels("cycle").value += 1
         rec = {"t": t, "kind": kind, "w0": w_start - self._t0,
                "build_s": build_s, "match_s": match_s, "apply_s": apply_s,
                "claims": claims, "backend": backend}
@@ -82,6 +90,12 @@ class CycleProfiler:
         if fallback is not None:
             rec["fallback"] = fallback
         self.cycles.append(rec)
+
+    def note_compile(self, path: str):
+        """Attribute one fresh-bucket XLA trace to an entry path
+        ("preview" from the collector dry run; record_cycle attributes
+        the "cycle" path itself)."""
+        self.jit_compiles.labels(path).value += 1
 
     def record_reconcile(self, *, t: float, w_start: float, wall_s: float,
                          preview_s: float, submitted: int = 0):
@@ -101,7 +115,11 @@ class CycleProfiler:
         out["preview_s"] = self.preview_h.sum
         out["cycles"] = {k[0]: int(c.value)
                          for k, c in self.cycles_c.children.items()}
-        out["jit_compiles"] = int(self.jit_compiles.value)
+        by_path = {k[0]: int(c.value)
+                   for k, c in self.jit_compiles.children.items()}
+        # "jit_compiles" stays the all-paths total (pre-label surface)
+        out["jit_compiles"] = sum(by_path.values())
+        out["jit_compiles_by_path"] = by_path
         return out
 
     # -- Chrome-trace rows (wall offsets -> microseconds) --------------------

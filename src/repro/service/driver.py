@@ -114,8 +114,14 @@ class WallClockDriver:
         while True:
             t = sim.loop.next_at()
             if t is None or t > sim.now:
-                return
+                break
             self._fire_group(t)
+        # injections may read pool state or schedule events inside a
+        # deferred-negotiation window; flush any staged cycles so they
+        # observe (and mutate) fully-applied claim state
+        quiesce = getattr(sim, "quiesce_negotiation", None)
+        if quiesce is not None:
+            quiesce()
 
     def _fire_group(self, t: float):
         """Fire ALL events sharing timestamp `t` — injections never see a
